@@ -1,0 +1,92 @@
+"""Fig. 16-17: collaborative analytics — dataset modification latency and
+storage, version diff vs difference size, aggregation queries (row vs
+column layout vs OrpheusDB-style baseline).
+
+Scaled down from the paper's 5M x 180 B records to 50k records (single
+CPU); record layout matches (12 B pk, two ints, variable text)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.apps import ColumnTable, OrpheusLite, RowTable
+from repro.core import ForkBase
+
+from .common import emit
+
+
+def make_records(rng, n):
+    recs = []
+    for i in range(n):
+        recs.append([f"pk{i:010d}".encode(),
+                     str(int(rng.integers(0, 1000))).encode(),
+                     str(int(rng.integers(0, 1000))).encode(),
+                     rng.bytes(int(rng.integers(100, 200)))])
+    return recs
+
+
+def run():
+    rng = np.random.default_rng(0)
+    n = 50_000
+    recs = make_records(rng, n)
+    db = ForkBase()
+    rt = RowTable(db, "ds")
+    t0 = time.perf_counter()
+    u0 = rt.load({r[0]: r for r in recs})
+    emit("ds_import_forkbase_s", (time.perf_counter() - t0) * 1e6,
+         f"physical={db.store.stats.physical_bytes / 1e6:.1f}MB")
+    ol = OrpheusLite()
+    t0 = time.perf_counter()
+    v0 = ol.load(recs)
+    emit("ds_import_orpheus_s", (time.perf_counter() - t0) * 1e6,
+         f"storage={ol.storage_bytes / 1e6:.1f}MB")
+
+    # Fig. 16: modification (100 rows) — ForkBase updates via the lazy
+    # handle + incremental commit; Orpheus checkout -> modify -> commit
+    idxs = rng.choice(n, 100, replace=False)
+    ups = {recs[i][0]: [recs[i][0], b"7", b"7", b"upd"] for i in idxs}
+    t0 = time.perf_counter()
+    u1 = rt.update(ups)
+    t_fb = (time.perf_counter() - t0) * 1e6
+    phys0 = db.store.stats.physical_bytes
+    t0 = time.perf_counter()
+    work = ol.checkout(v0)
+    for i in idxs:
+        work[i] = [recs[i][0], b"7", b"7", b"upd"]
+    v1 = ol.commit(v0, {int(i): work[i] for i in idxs})
+    t_or = (time.perf_counter() - t0) * 1e6
+    emit("ds_modify100_forkbase", t_fb, f"speedup={t_or / t_fb:.1f}x")
+    emit("ds_modify100_orpheus", t_or)
+
+    # Fig. 17a: version diff vs difference size
+    for k in [10, 100, 1000]:
+        idxs = rng.choice(n, k, replace=False)
+        uk = rt.update({recs[i][0]: [recs[i][0], b"9", b"9", b"d"]
+                        for i in idxs})
+        vk = ol.commit(v0, {int(i): [recs[i][0], b"9", b"9", b"d"]
+                            for i in idxs})
+        t0 = time.perf_counter()
+        a, r, c = rt.diff(uk, u0)
+        t_fb = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        d = ol.diff(vk, v0)
+        t_or = (time.perf_counter() - t0) * 1e6
+        emit(f"ds_diff{k}_forkbase", t_fb, f"found={len(c) + len(a)}")
+        emit(f"ds_diff{k}_orpheus", t_or, f"found={len(d)}")
+
+    # Fig. 17b: aggregation — row vs column vs orpheus
+    ct = ColumnTable(db, "dsc", ["pk", "a", "b", "payload"])
+    ct.load(recs)
+    t0 = time.perf_counter()
+    s_row = rt.aggregate(1)
+    emit("ds_agg_row_forkbase", (time.perf_counter() - t0) * 1e6)
+    t0 = time.perf_counter()
+    s_col = ct.aggregate("a")
+    t_col = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    s_or = ol.aggregate(v0, 1)
+    t_or = (time.perf_counter() - t0) * 1e6
+    assert s_row == s_col == s_or
+    emit("ds_agg_col_forkbase", t_col, f"vs orpheus {t_or / t_col:.1f}x")
+    emit("ds_agg_orpheus", t_or)

@@ -1,0 +1,36 @@
+"""Shared benchmark helpers: timing + CSV emission.
+
+Scales are reduced vs the paper's 64-node/5M-record cluster runs (this is
+a single CPU container); every benchmark reports ForkBase and its
+competitor on the SAME harness so the paper's *relative* claims are what
+is reproduced (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+ROWS: list[tuple] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+@contextmanager
+def timer():
+    t = {}
+    t0 = time.perf_counter()
+    yield t
+    t["s"] = time.perf_counter() - t0
+
+
+def bench(fn, n: int, *, warmup: int = 1) -> float:
+    """Mean microseconds per call."""
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6

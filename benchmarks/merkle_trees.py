@@ -1,0 +1,57 @@
+"""Fig. 11: commit latency under different Merkle structures — bucket
+trees (nb = 16 / 256 / 4096), Patricia trie, and ForkBase Map objects
+(which 'scale gracefully by dynamically adjusting the tree height and
+bounding node sizes')."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.apps.blockchain_kv import BucketTree, MerkleTrie
+from repro.core import FMap, ForkBase
+
+from .common import bench, emit
+
+
+def run():
+    rng = np.random.default_rng(0)
+    n_keys = 4096
+    batch = 50
+    keys = [f"key{i}".encode() for i in range(n_keys)]
+
+    for nb in [16, 256, 4096]:
+        tree = BucketTree(nb)
+        tree.update({k: rng.bytes(64) for k in keys})
+        i = [0]
+
+        def commit():
+            tree.update({keys[(i[0] * 7 + j) % n_keys]: rng.bytes(64)
+                         for j in range(batch)})
+            i[0] += 1
+        us = bench(commit, 20)
+        emit(f"merkle_bucket_nb{nb}", us,
+             f"hashed_bytes={tree.hashed_bytes}")
+
+    trie = MerkleTrie()
+    trie.update({k: rng.bytes(64) for k in keys})
+    i = [0]
+
+    def commit_trie():
+        trie.update({keys[(i[0] * 7 + j) % n_keys]: rng.bytes(64)
+                     for j in range(batch)})
+        i[0] += 1
+    emit("merkle_trie", bench(commit_trie, 20),
+         f"hashed_bytes={trie.hashed_bytes}")
+
+    db = ForkBase()
+    m = FMap({k: rng.bytes(64) for k in keys})
+    db.put("state", m)
+    i = [0]
+
+    def commit_fb():
+        mm = db.get("state").map()
+        for j in range(batch):
+            mm.set(keys[(i[0] * 7 + j) % n_keys], rng.bytes(64))
+        db.put("state", mm)
+        i[0] += 1
+    emit("merkle_forkbase_map", bench(commit_fb, 20),
+         f"physical={db.store.stats.physical_bytes}")

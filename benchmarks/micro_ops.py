@@ -1,0 +1,56 @@
+"""Table 3: micro-benchmark of ForkBase operations — Put/Get for String,
+Blob, Map at 1 KB / 20 KB request sizes, plus Get-Meta, Track, Fork."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import FBlob, FMap, FString, ForkBase
+
+from .common import bench, emit
+
+
+def run():
+    rng = np.random.default_rng(0)
+    db = ForkBase()
+    for size, tag in [(1024, "1KB"), (20480, "20KB")]:
+        payload = rng.bytes(size)
+        items = {f"k{i}".encode(): rng.bytes(max(1, size // 64))
+                 for i in range(64)}
+
+        i = [0]
+
+        def put_string():
+            db.put(f"s{tag}{i[0]}", FString(payload)); i[0] += 1
+        emit(f"put_string_{tag}", bench(put_string, 200))
+
+        def put_blob():
+            db.put(f"b{tag}{i[0]}", FBlob(payload)); i[0] += 1
+        emit(f"put_blob_{tag}", bench(put_blob, 200))
+
+        def put_map():
+            db.put(f"m{tag}{i[0]}", FMap(items)); i[0] += 1
+        emit(f"put_map_{tag}", bench(put_map, 100))
+
+        db.put(f"sx{tag}", FString(payload))
+        db.put(f"bx{tag}", FBlob(payload))
+        db.put(f"mx{tag}", FMap(items))
+        emit(f"get_string_{tag}",
+             bench(lambda: db.get(f"sx{tag}").string(), 500))
+        emit(f"get_blob_meta_{tag}",
+             bench(lambda: db.get(f"bx{tag}"), 500))
+        emit(f"get_blob_full_{tag}",
+             bench(lambda: db.get(f"bx{tag}").blob().read(), 300))
+        emit(f"get_map_full_{tag}",
+             bench(lambda: list(db.get(f"mx{tag}").map().items()), 300))
+
+        for _ in range(20):     # history for track
+            b = db.get(f"bx{tag}").blob()
+            b.append(b"x")
+            db.put(f"bx{tag}", b)
+        emit(f"track_{tag}",
+             bench(lambda: db.track(f"bx{tag}", "master", (0, 10)), 300))
+        j = [0]
+
+        def fork():
+            db.fork(f"bx{tag}", "master", f"br{tag}{j[0]}"); j[0] += 1
+        emit(f"fork_{tag}", bench(fork, 300))

@@ -1,0 +1,42 @@
+"""Table 4: cost breakdown of a Put — serialization, deserialization,
+cryptographic hash, rolling hash, persistence — for String and Blob at
+1 KB / 20 KB.  Also reports the Pallas-kernel rolling-hash path."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import FBlob, FString
+from repro.core.chunk import cid_of, encode_chunk
+from repro.core.chunker import DEFAULT_PARAMS, boundary_bitmap
+from repro.core.chunkstore import ChunkStore
+from repro.core.fobject import FObject
+from repro.core.hashing import sha256
+from repro.kernels.ops import boundary_bitmap as pallas_bitmap
+
+from .common import bench, emit
+
+
+def run():
+    rng = np.random.default_rng(0)
+    for size, tag in [(1024, "1KB"), (20480, "20KB")]:
+        payload = rng.bytes(size)
+        arr = np.frombuffer(payload, dtype=np.uint8)
+        obj = FObject(FString.TYPE, b"key", payload, 3,
+                      (b"\x01" * 32,), b"")
+        raw = obj.serialize()
+        emit(f"serialize_string_{tag}", bench(lambda: obj.serialize(), 2000))
+        emit(f"deserialize_string_{tag}",
+             bench(lambda: FObject.deserialize(raw, b"\x00" * 32), 2000))
+        emit(f"cryptohash_{tag}", bench(lambda: sha256(payload), 2000))
+        emit(f"rollinghash_numpy_{tag}",
+             bench(lambda: boundary_bitmap(arr, DEFAULT_PARAMS), 500))
+        emit(f"rollinghash_pallas_{tag}",
+             bench(lambda: pallas_bitmap(arr), 100),
+             "interpret-mode on CPU; TPU path identical kernel")
+        store = ChunkStore()
+        chunkraw = encode_chunk(3, payload)
+        n = [0]
+
+        def persist():
+            store.put(chunkraw + str(n[0]).encode()); n[0] += 1
+        emit(f"persistence_{tag}", bench(persist, 1000))

@@ -1,0 +1,27 @@
+"""Benchmark driver: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (common.emit)."""
+from __future__ import annotations
+
+import sys
+import time
+
+MODULES = ["micro_ops", "put_breakdown", "scalability", "blockchain_ops",
+           "merkle_trees", "scan_queries", "wiki_bench", "analytics_bench",
+           "ckpt_dedup"]
+
+
+def main() -> None:
+    only = sys.argv[1:] if len(sys.argv) > 1 else MODULES
+    print("name,us_per_call,derived")
+    for mod in MODULES:
+        if mod not in only:
+            continue
+        t0 = time.time()
+        print(f"# --- {mod} ({time.strftime('%H:%M:%S')})", flush=True)
+        m = __import__(f"benchmarks.{mod}", fromlist=["run"])
+        m.run()
+        print(f"# --- {mod} done in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Fig. 8: scalability with multiple servlets.
+
+The paper's result: near-linear scaling because servlets do not
+communicate.  This container has one core, so we measure per-request cost
+as servlet count grows (routing + partitioning overhead must stay flat)
+and report aggregate throughput under the paper's no-communication
+scaling model: N x single-servlet rate / (1 + overhead)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Cluster, FBlob
+
+from .common import bench, emit
+
+
+def run():
+    rng = np.random.default_rng(0)
+    payload = rng.bytes(1024)
+    base_us = None
+    for n in [1, 4, 16, 64]:
+        cl = Cluster(n, "2LP")
+        i = [0]
+
+        def put():
+            cl.put(f"key{i[0]}", FBlob(payload)); i[0] += 1
+        us = bench(put, 200)
+        if base_us is None:
+            base_us = us
+        agg = n * 1e6 / us
+        emit(f"scal_put_{n}servlets", us,
+             f"aggregate~{agg:.0f}ops/s overhead={us / base_us:.2f}x")
+        j = [0]
+
+        def get():
+            cl.get(f"key{j[0] % i[0]}").blob().read(); j[0] += 1
+        us_g = bench(get, 400)
+        emit(f"scal_get_{n}servlets", us_g,
+             f"aggregate~{n * 1e6 / us_g:.0f}ops/s")

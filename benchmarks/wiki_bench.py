@@ -1,0 +1,96 @@
+"""Fig. 13-15: wiki engine — edit throughput at varying in-place-update
+ratios, storage consumption vs Redis, consecutive-version reads with a
+client chunk cache, and storage distribution under a skewed workload for
+1-layer vs 2-layer partitioning."""
+from __future__ import annotations
+
+import statistics
+import time
+
+import numpy as np
+
+from repro.apps import ForkBaseWiki, RedisWiki
+from repro.core import Cluster, FBlob, ForkBase
+
+from .common import bench, emit
+
+
+def run():
+    rng = np.random.default_rng(0)
+    n_pages, page_size, edits = 32, 15 * 1024, 10
+
+    for upd_ratio, tag in [(1.0, "100U"), (0.5, "50U"), (0.0, "0U")]:
+        w, r = ForkBaseWiki(), RedisWiki()
+        texts = {}
+        for p in range(n_pages):
+            t = rng.bytes(page_size)
+            texts[p] = t
+            w.create(f"page{p}", t)
+            r.create(f"page{p}", t)
+        t0 = time.perf_counter()
+        for e in range(edits):
+            for p in range(n_pages):
+                cur = texts[p]
+                pos = int(rng.integers(0, len(cur) - 256))
+                payload = rng.bytes(200)
+                if rng.random() < upd_ratio:   # in-place update
+                    new = cur[:pos] + payload + cur[pos + 200:]
+                    w.edit(f"page{p}",
+                           lambda b, q=pos, s=payload: b.replace(q, 200, s))
+                else:                          # insertion
+                    new = cur[:pos] + payload + cur[pos:]
+                    w.edit(f"page{p}",
+                           lambda b, q=pos, s=payload: b.insert(q, s))
+                texts[p] = new
+        us = (time.perf_counter() - t0) / (edits * n_pages) * 1e6
+        emit(f"wiki_edit_{tag}_forkbase", us,
+             f"throughput~{1e6 / us:.0f}ops/s")
+        t0 = time.perf_counter()
+        for e in range(edits):
+            for p in range(n_pages):
+                r.edit(f"page{p}", texts[p])
+        us_r = (time.perf_counter() - t0) / (edits * n_pages) * 1e6
+        emit(f"wiki_edit_{tag}_redis", us_r)
+        if upd_ratio == 0.5:
+            emit("wiki_storage_forkbase_bytes", w.storage_bytes(),
+                 f"vs redis {r.storage_bytes()} -> "
+                 f"{r.storage_bytes() / w.storage_bytes():.2f}x smaller")
+
+    # Fig. 14: read consecutive versions with client chunk cache
+    w = ForkBaseWiki()
+    r = RedisWiki()
+    t = rng.bytes(page_size)
+    w.create("p", t)
+    r.create("p", t)
+    for e in range(16):
+        pos = int(rng.integers(0, len(t) - 100))
+        t = t[:pos] + rng.bytes(64) + t[pos:]
+        w.edit("p", lambda b, q=pos, s=t[pos:pos + 64]: b.insert(q, s))
+        r.edit("p", t)
+    for k in [1, 4, 16]:
+        cache: set = set()
+        t0 = time.perf_counter()
+        tot_f = tot_c = 0
+        for back in range(k):
+            _, f, ch = w.read_version("p", back, cache)
+            tot_f, tot_c = tot_f + f, tot_c + ch
+        us = (time.perf_counter() - t0) / k * 1e6
+        emit(f"wiki_read_{k}vers_forkbase", us,
+             f"cache_hit={tot_c}/{tot_c + tot_f}")
+        t0 = time.perf_counter()
+        for back in range(k):
+            r.read_version("p", back)
+        emit(f"wiki_read_{k}vers_redis",
+             (time.perf_counter() - t0) / k * 1e6)
+
+    # Fig. 15: skewed-workload storage distribution, 1LP vs 2LP
+    for mode in ["1LP", "2LP"]:
+        cl = Cluster(16, mode)
+        zipf = rng.zipf(1.5, size=400)
+        for i, z in enumerate(zipf):
+            page = f"hot{int(z) % 8}"
+            cl.put(page, FBlob(rng.bytes(8192)), branch=f"b{i}")
+        dist = cl.storage_distribution()
+        cv = statistics.pstdev(dist) / max(1, statistics.mean(dist))
+        emit(f"wiki_skew_{mode}_cv", cv * 100,
+             f"bytes={min(dist)}..{max(dist)}")

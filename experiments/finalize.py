@@ -1,0 +1,71 @@
+"""Regenerate the EXPERIMENTS.md roofline snapshot from dry-run JSONs."""
+import io
+import json
+import re
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+from repro.roofline import roofline_terms  # noqa: E402
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def table(mesh: str) -> str:
+    rows = []
+    for f in sorted((ROOT / "experiments" / "dryrun").glob("*.json")):
+        cell = json.loads(f.read_text())
+        if cell["mesh"] != mesh or cell.get("variant", "base") != "base":
+            continue
+        t = roofline_terms(cell)
+        rows.append((cell, t))
+    out = io.StringIO()
+    out.write(f"**Mesh {mesh}** — terms in seconds/step (decode: /token):\n\n")
+    out.write("| arch | shape | compute_s | memory_s | coll_s | dominant |"
+              " useful | roofline | peak GB |\n")
+    out.write("|---|---|---|---|---|---|---|---|---|\n")
+    for cell, t in rows:
+        out.write(
+            f"| {cell['arch']} | {cell['shape']} | {t['compute_s']:.3g} "
+            f"| {t['memory_s']:.3g} | {t['collective_s']:.3g} "
+            f"| **{t['dominant']}** | {t['useful_ratio']:.2f} "
+            f"| {t['roofline_fraction']:.3f} "
+            f"| {cell['memory']['peak_per_device_gb']:.1f} |\n")
+    return out.getvalue()
+
+
+def variants_table() -> str:
+    rows = []
+    for f in sorted((ROOT / "experiments" / "dryrun").glob("*.json")):
+        cell = json.loads(f.read_text())
+        if cell.get("variant", "base") == "base":
+            continue
+        t = roofline_terms(cell)
+        rows.append((cell, t))
+    if not rows:
+        return ""
+    out = io.StringIO()
+    out.write("\n**Hillclimb variants** (non-base, single-pod):\n\n")
+    out.write("| arch | shape | variant | compute_s | memory_s | coll_s |"
+              " peak GB |\n|---|---|---|---|---|---|---|\n")
+    for cell, t in rows:
+        out.write(f"| {cell['arch']} | {cell['shape']} "
+                  f"| {cell['variant']} | {t['compute_s']:.3g} "
+                  f"| {t['memory_s']:.3g} | {t['collective_s']:.3g} "
+                  f"| {cell['memory']['peak_per_device_gb']:.1f} |\n")
+    return out.getvalue()
+
+
+def main():
+    md = (ROOT / "EXPERIMENTS.md").read_text()
+    snapshot = table("16x16") + "\n" + table("2x16x16") + variants_table()
+    md = re.sub(r"<!-- ROOFLINE_TABLE -->.*?(?=\nReading the table:)",
+                "<!-- ROOFLINE_TABLE -->\n" + snapshot + "\n",
+                md, flags=re.S)
+    (ROOT / "EXPERIMENTS.md").write_text(md)
+    print("EXPERIMENTS.md roofline snapshot updated "
+          f"({snapshot.count(chr(10))} lines)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro: ForkBase (storage engine for blockchain & forkable applications)
+reproduced as the state substrate of a multi-pod JAX training/serving
+framework.  See DESIGN.md for the system map."""
+__version__ = "1.0.0"

@@ -1,0 +1,160 @@
+"""ForkBase-backed checkpointing — the paper's storage engine as the
+training framework's state substrate (DESIGN.md §2).
+
+Layout per checkpoint:
+  * every tensor leaf -> an FBlob (POS-Tree over its raw bytes): chunk-level
+    dedup across steps (optimizer moments / embeddings barely change
+    between nearby steps) and across experiment forks;
+  * one FMap manifest per checkpoint: tree path -> JSON{root cid, dtype,
+    shape}; committed as a single Put on the run's branch, so the manifest
+    uid is the tamper-evident version of the WHOLE training state and its
+    ``bases`` chain is the training lineage;
+  * fork-on-demand  = hyperparameter fork / warm restart from any step;
+  * fork-on-conflict = two pods racing to commit the same step leave two
+    untagged heads; the controller resolves (runtime/controller.py).
+
+Restore materializes tensors host-side and re-shards onto whatever mesh
+the restarted job has (elastic resize — the checkpoint is mesh-agnostic).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+from ..core import ForkBase, FBlob, FMap, POSTree, load_fobject
+from ..core import chunk as ck
+
+
+def _leaf_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out.append((name, leaf))
+    return out, treedef
+
+
+class CheckpointStore:
+    def __init__(self, db: ForkBase | None = None, key: str = "ckpt"):
+        self.db = db if db is not None else ForkBase()
+        self.key = key
+
+    # ------------------------------------------------------------- save
+    def save(self, state, branch: str, *, step: int,
+             extra: dict | None = None) -> bytes:
+        """Commit `state` (pytree of arrays) as one version on `branch`.
+        Returns the checkpoint uid."""
+        leaves, _ = _leaf_paths(state)
+        head = self.db.get(self.key, branch)
+        manifest = (head.map() if head is not None else FMap())
+        for name, leaf in leaves:
+            arr = np.asarray(leaf)
+            blob = FBlob(arr.tobytes())
+            root = blob.commit(self.db.store)
+            meta = {"cid": root.hex(), "dtype": str(arr.dtype),
+                    "shape": list(arr.shape)}
+            manifest.set(name.encode(), json.dumps(meta).encode())
+        ctx = json.dumps({"step": step, **(extra or {})}).encode()
+        return self.db.put(self.key, manifest, branch, context=ctx)
+
+    def save_on_base(self, state, base_uid: bytes, *, step: int,
+                     extra: dict | None = None) -> bytes:
+        """Fork-on-conflict commit path: Put against an explicit base
+        version (two pods racing on the same step produce two untagged
+        heads, paper §3.3.2)."""
+        leaves, _ = _leaf_paths(state)
+        manifest = self.db.get(self.key, uid=base_uid).map()
+        for name, leaf in leaves:
+            arr = np.asarray(leaf)
+            blob = FBlob(arr.tobytes())
+            root = blob.commit(self.db.store)
+            manifest.set(name.encode(), json.dumps(
+                {"cid": root.hex(), "dtype": str(arr.dtype),
+                 "shape": list(arr.shape)}).encode())
+        ctx = json.dumps({"step": step, **(extra or {})}).encode()
+        return self.db.put(self.key, manifest, base_uid=base_uid,
+                           context=ctx)
+
+    # ---------------------------------------------------------- restore
+    def restore(self, like, branch: str | None = None,
+                uid: bytes | None = None, mesh=None, specs=None):
+        """Rebuild the pytree of `like` (shapes/dtypes template).  With
+        mesh+specs the tensors are device_put with the target sharding —
+        the restart mesh need not match the writer's (elastic)."""
+        handle = self.db.get(self.key, branch, uid=uid)
+        assert handle is not None, "no checkpoint found"
+        manifest = handle.map()
+        leaves, treedef = _leaf_paths(like)
+        spec_leaves = None
+        if specs is not None:
+            spec_leaves, _ = _leaf_paths(specs)
+        out = []
+        for i, (name, leaf) in enumerate(leaves):
+            raw = manifest.get(name.encode())
+            assert raw is not None, f"missing tensor {name}"
+            meta = json.loads(raw)
+            tree = POSTree.from_root(self.db.store, ck.BLOB,
+                                     bytes.fromhex(meta["cid"]))
+            data = tree.read_bytes(0, tree.total_count)
+            arr = np.frombuffer(data, dtype=meta["dtype"]).reshape(
+                meta["shape"])
+            if mesh is not None and spec_leaves is not None:
+                from jax.sharding import NamedSharding
+                arr = jax.device_put(
+                    arr, NamedSharding(mesh, spec_leaves[i][1]))
+            else:
+                arr = jax.numpy.asarray(arr)
+            out.append(arr)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    # ------------------------------------------------------------ meta
+    def step_of(self, uid: bytes) -> int:
+        obj = load_fobject(self.db.store, uid)
+        return json.loads(obj.context or b"{}").get("step", -1)
+
+    def history(self, branch: str, limit: int = 100):
+        return [(o.uid, json.loads(o.context or b"{}"))
+                for o in self.db.track(self.key, branch, (0, limit))]
+
+    def fork(self, ref: str | bytes, new_branch: str) -> None:
+        """Experiment fork (warm restart from any historical version)."""
+        self.db.fork(self.key, ref, new_branch)
+
+    def verify(self, uid: bytes, ancestor: bytes) -> bool:
+        """Tamper-evident lineage check: does `uid` derive from
+        `ancestor`? (model provenance, DESIGN.md §2)."""
+        return self.db.verify_lineage(uid, ancestor)
+
+    def racing_heads(self):
+        return self.db.list_untagged_branches(self.key)
+
+    def resolve_race(self, *uids, prefer: str = "step") -> bytes:
+        """Merge racing pod commits: keep the head with the greatest
+        data progress (context step), paper-style choose-one resolution."""
+        best = max(uids, key=self.step_of)
+
+        def resolver(conflict):
+            return None  # unused: choose-one at version level
+        # choose-one at the version level: merge with ours=best
+        others = [u for u in uids if u != best]
+        from ..core.merge import choose_one
+        acc = best
+        for u in others:
+            acc = self.db.merge(self.key, acc, u, resolver=choose_one(0))
+        return acc
+
+    @property
+    def dedup_stats(self):
+        return self.db.store.stats
+
+
+def save_tree(state, db: ForkBase, branch: str = "master", step: int = 0):
+    return CheckpointStore(db).save(state, branch, step=step)
+
+
+def restore_tree(like, db: ForkBase, branch: str = "master"):
+    return CheckpointStore(db).restore(like, branch)

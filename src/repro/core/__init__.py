@@ -1,0 +1,29 @@
+"""ForkBase core — the paper's storage engine.
+
+Public surface:
+  ForkBase (db.py)          — embedded engine, APIs M1–M17 (Table 1)
+  Cluster (cluster.py)      — distributed deployment, 2-layer partitioning
+  FBlob/FList/FMap/FSet     — chunkable types (POS-Tree backed)
+  FString/FTuple/FInt       — primitive types
+  POSTree (postree.py)      — Pattern-Oriented-Split Tree
+  ChunkStore                — content-addressed chunk storage
+"""
+from .branch import DEFAULT_BRANCH, GuardFailed
+from .chunker import ChunkParams, DEFAULT_PARAMS
+from .chunkstore import ChunkStore, ReplicatedStore
+from .cluster import Cluster
+from .db import ForkBase, TypeNotMatch, ValueHandle
+from .fobject import FObject, load_fobject, make_fobject
+from .merge import (BUILTIN_RESOLVERS, Conflict, MergeConflict,
+                    aggregate_resolver, append_resolver, choose_one, lca)
+from .postree import POSTree
+from .types import FBlob, FInt, FList, FMap, FSet, FString, FTuple
+
+__all__ = [
+    "ForkBase", "Cluster", "ChunkStore", "ReplicatedStore", "POSTree",
+    "FBlob", "FList", "FMap", "FSet", "FString", "FTuple", "FInt",
+    "FObject", "ChunkParams", "DEFAULT_PARAMS", "DEFAULT_BRANCH",
+    "GuardFailed", "TypeNotMatch", "ValueHandle", "MergeConflict",
+    "Conflict", "BUILTIN_RESOLVERS", "choose_one", "append_resolver",
+    "aggregate_resolver", "lca", "load_fobject", "make_fobject",
+]

@@ -1,0 +1,73 @@
+"""Branch management (paper §4.5): per-key TB-table (tagged branches:
+name -> head uid) and UB-table (untagged branch heads = leaves of the
+object derivation graph)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+DEFAULT_BRANCH = "master"
+
+
+class GuardFailed(Exception):
+    """Guarded Put failed: current head != guard_uid (paper §4.5.1)."""
+
+
+@dataclass
+class KeyBranches:
+    tb: dict[str, bytes] = field(default_factory=dict)   # tag -> head uid
+    ub: set[bytes] = field(default_factory=set)          # DAG leaf uids
+
+
+class BranchTable:
+    """One per servlet; serializes concurrent updates per key (§4.5.1)."""
+
+    def __init__(self):
+        self._keys: dict[bytes, KeyBranches] = {}
+
+    def of(self, key: bytes) -> KeyBranches:
+        return self._keys.setdefault(bytes(key), KeyBranches())
+
+    def known(self, key: bytes) -> bool:
+        return bytes(key) in self._keys
+
+    def keys(self) -> list[bytes]:
+        return sorted(self._keys)
+
+    # ---- update rules (§4.5.1) ----
+    def on_new_version(self, key: bytes, uid: bytes,
+                       bases: tuple[bytes, ...]) -> None:
+        """UB-table: add the new head, retire its bases.  A base not present
+        means it was already derived -> implicit fork (FoC) keeps both."""
+        kb = self.of(key)
+        for b in bases:
+            kb.ub.discard(b)
+        kb.ub.add(uid)
+
+    def set_head(self, key: bytes, branch: str, uid: bytes,
+                 guard: bytes | None = None) -> None:
+        kb = self.of(key)
+        if guard is not None and kb.tb.get(branch) != guard:
+            raise GuardFailed(branch)
+        kb.tb[branch] = uid
+
+    def head(self, key: bytes, branch: str) -> bytes | None:
+        return self.of(key).tb.get(branch)
+
+    def fork(self, key: bytes, new_branch: str, uid: bytes) -> None:
+        kb = self.of(key)
+        assert new_branch not in kb.tb, f"branch exists: {new_branch}"
+        kb.tb[new_branch] = uid
+
+    def rename(self, key: bytes, old: str, new: str) -> None:
+        kb = self.of(key)
+        assert new not in kb.tb, f"branch exists: {new}"
+        kb.tb[new] = kb.tb.pop(old)
+
+    def remove(self, key: bytes, branch: str) -> None:
+        self.of(key).tb.pop(branch, None)
+
+    def tagged(self, key: bytes) -> dict[str, bytes]:
+        return dict(self.of(key).tb)
+
+    def untagged(self, key: bytes) -> list[bytes]:
+        return sorted(self.of(key).ub)

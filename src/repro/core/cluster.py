@@ -1,0 +1,163 @@
+"""Distributed deployment (paper §4.1 Fig. 5, §4.6): master + request
+dispatcher + servlets + chunk-storage pool, with hash-based two-layer
+partitioning:
+
+  1. dispatcher -> servlet : request-key hash;
+  2. servlet   -> storage  : chunk cid hash (meta chunks stay local).
+
+Because cids are cryptographic hashes, layer 2 spreads chunks uniformly
+even under severely skewed key workloads (Fig. 15).  ``mode='1LP'``
+reproduces the paper's one-layer baseline (all of a key's chunks stored on
+its servlet's node).  Runs in-process; per-node byte/op counters stand in
+for real placement, and POS-Tree construction rebalancing (§4.6.1) is a
+work-queue transfer between servlets.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+
+from . import chunk as ck
+from .chunker import ChunkParams, DEFAULT_PARAMS
+from .chunkstore import ChunkStore
+from .db import ForkBase
+
+
+def _h(data: bytes) -> int:
+    return int.from_bytes(hashlib.sha256(data).digest()[:8], "little")
+
+
+@dataclass
+class NodeStats:
+    chunk_bytes: int = 0
+    chunks: int = 0
+    requests: int = 0
+    build_work: int = 0      # POS-Tree construction work units (bytes)
+
+
+class _RoutingStore:
+    """Store facade a servlet writes through: meta chunks pinned locally,
+    data chunks placed by cid hash across the pool (2LP) or locally (1LP).
+    Reads go straight to the owning node (dispatcher fast path, §4.6)."""
+
+    def __init__(self, cluster: "Cluster", home: int):
+        self.cluster = cluster
+        self.home = home
+
+    def _owner(self, cid: bytes) -> int:
+        if self.cluster.mode == "1LP":
+            return self.home
+        return _h(cid) % len(self.cluster.nodes)
+
+    def put(self, raw: bytes, cid: bytes | None = None) -> bytes:
+        if cid is None:
+            cid = ck.cid_of(raw)
+        if ck.chunk_type(raw) == ck.META:
+            node = self.home          # meta chunks always local (§4.6)
+        else:
+            node = self._owner(cid)
+        st = self.cluster.nodes[node]
+        before = len(st.store)
+        st.store.put(raw, cid)
+        if len(st.store) > before:
+            st.stats.chunk_bytes += len(raw)
+            st.stats.chunks += 1
+        self.cluster.index[cid] = node
+        return cid
+
+    def get(self, cid: bytes) -> bytes:
+        node = self.cluster.index.get(cid)
+        if node is None:
+            node = self._owner(cid)
+        st = self.cluster.nodes[node]
+        st.stats.requests += 1
+        return st.store.get(cid)
+
+    def has(self, cid: bytes) -> bool:
+        node = self.cluster.index.get(cid, self._owner(cid))
+        return self.cluster.nodes[node].store.has(cid)
+
+
+@dataclass
+class Node:
+    store: ChunkStore
+    stats: NodeStats
+    servlet: ForkBase | None = None
+
+
+class Cluster:
+    """In-process ForkBase cluster."""
+
+    def __init__(self, n_nodes: int = 4, mode: str = "2LP",
+                 params: ChunkParams = DEFAULT_PARAMS):
+        assert mode in ("1LP", "2LP")
+        self.mode = mode
+        self.params = params
+        self.index: dict[bytes, int] = {}   # master's chunk location map
+        self.nodes = [Node(ChunkStore(), NodeStats()) for _ in range(n_nodes)]
+        for i, node in enumerate(self.nodes):
+            node.servlet = ForkBase(_RoutingStore(self, i), params)
+
+    # ---- dispatcher (layer 1) ----
+    def servlet_of(self, key: bytes) -> ForkBase:
+        key = key.encode() if isinstance(key, str) else bytes(key)
+        i = _h(key) % len(self.nodes)
+        self.nodes[i].stats.requests += 1
+        return self.nodes[i].servlet
+
+    # public API mirrors ForkBase, routed per key
+    def put(self, key, value, branch=None, **kw):
+        svc = self._build_servlet_for(key, value)
+        return svc.put(key, value, branch, **kw)
+
+    def get(self, key, branch=None, **kw):
+        return self.servlet_of(key).get(key, branch, **kw)
+
+    def fork(self, key, ref, new_branch):
+        return self.servlet_of(key).fork(key, ref, new_branch)
+
+    def merge(self, key, target, *refs, **kw):
+        return self.servlet_of(key).merge(key, target, *refs, **kw)
+
+    def track(self, key, ref, dist_rng=(0, 1 << 30)):
+        return self.servlet_of(key).track(key, ref, dist_rng)
+
+    # ---- §4.6.1 construction rebalancing ----
+    def _build_servlet_for(self, key, value) -> ForkBase:
+        """POS-Tree construction is CPU-heavy; an overloaded servlet locks
+        the branch table and delegates chunking to the least-loaded peer,
+        embedding the returned root cid itself.  We model load with the
+        build_work counter; the branch-table update always happens on the
+        key's home servlet (returned here)."""
+        home = self.servlet_of(key)
+        size = _value_size(value)
+        hi = max(self.nodes, key=lambda n: n.stats.build_work)
+        lo = min(self.nodes, key=lambda n: n.stats.build_work)
+        owner = self.nodes[_h(key.encode() if isinstance(key, str)
+                              else bytes(key)) % len(self.nodes)]
+        if (owner is hi and owner.stats.build_work >
+                2 * max(1, lo.stats.build_work) and size > 0):
+            lo.stats.build_work += size        # delegated construction
+        else:
+            owner.stats.build_work += size
+        return home
+
+    # ---- stats ----
+    def storage_distribution(self) -> list[int]:
+        return [n.stats.chunk_bytes for n in self.nodes]
+
+    def build_distribution(self) -> list[int]:
+        return [n.stats.build_work for n in self.nodes]
+
+
+def _value_size(value) -> int:
+    if hasattr(value, "read"):
+        try:
+            return len(value)
+        except Exception:
+            return 0
+    if hasattr(value, "encode") and not isinstance(value, str):
+        return len(value.encode())
+    if isinstance(value, (bytes, bytearray, str)):
+        return len(value)
+    return 0

@@ -1,0 +1,300 @@
+"""ForkBase connector — the public API (paper Table 1, M1–M17 + guarded
+Put §4.5.1 + Diff §3.2).
+
+Both fork semantics are first-class:
+  * Fork-on-Demand  (FoD): named (tagged) branches, explicit Fork/Merge;
+  * Fork-on-Conflict (FoC): ``Put(key, base_uid, value)`` against an already
+    derived base implicitly forks; the UB-table tracks the resulting
+    untagged heads and ``Merge(key, uid1, uid2, ...)`` reconciles them.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable
+
+from . import chunk as ck
+from . import merge as mg
+from .branch import DEFAULT_BRANCH, BranchTable, GuardFailed
+from .chunker import ChunkParams, DEFAULT_PARAMS
+from .chunkstore import ChunkStore
+from .fobject import (CHUNKABLE_TYPES, FObject, load_fobject, make_fobject)
+from .postree import POSTree
+from .types import (CHUNKABLE_CLASSES, FBlob, FInt, FList, FMap, FSet,
+                    FString, FTuple, PRIMITIVE_CLASSES)
+
+
+class TypeNotMatch(Exception):
+    pass
+
+
+class ValueHandle:
+    """Typed view over a Get result (paper Fig. 4: value.Blob() etc.)."""
+
+    def __init__(self, db: "ForkBase", obj: FObject):
+        self.db = db
+        self.obj = obj
+
+    @property
+    def type(self) -> int:
+        return self.obj.type
+
+    @property
+    def uid(self) -> bytes:
+        return self.obj.uid
+
+    def _chunkable(self, kind: int):
+        if self.obj.type != kind:
+            raise TypeNotMatch(self.obj.type_name())
+        tree = POSTree.from_root(self.db.store, kind, self.obj.data,
+                                 self.db.params)
+        return CHUNKABLE_CLASSES[kind].from_tree(tree)
+
+    def blob(self) -> FBlob:
+        return self._chunkable(ck.BLOB)
+
+    def list(self) -> FList:
+        return self._chunkable(ck.LIST)
+
+    def map(self) -> FMap:
+        return self._chunkable(ck.MAP)
+
+    def set(self) -> FSet:
+        return self._chunkable(ck.SET)
+
+    def primitive(self):
+        if self.obj.type not in PRIMITIVE_CLASSES:
+            raise TypeNotMatch(self.obj.type_name())
+        return PRIMITIVE_CLASSES[self.obj.type].decode(self.obj.data)
+
+    def string(self) -> FString:
+        if self.obj.type != FString.TYPE:
+            raise TypeNotMatch(self.obj.type_name())
+        return FString.decode(self.obj.data)
+
+    def tuple(self) -> FTuple:
+        if self.obj.type != FTuple.TYPE:
+            raise TypeNotMatch(self.obj.type_name())
+        return FTuple.decode(self.obj.data)
+
+    def integer(self) -> FInt:
+        if self.obj.type != FInt.TYPE:
+            raise TypeNotMatch(self.obj.type_name())
+        return FInt.decode(self.obj.data)
+
+
+class ForkBase:
+    """Embedded single-servlet engine (one servlet + one chunk storage,
+    §4.1).  cluster.Cluster wires several of these behind a dispatcher."""
+
+    def __init__(self, store: ChunkStore | None = None,
+                 params: ChunkParams = DEFAULT_PARAMS):
+        self.store = store if store is not None else ChunkStore()
+        self.params = params
+        self.branches = BranchTable()
+
+    # ------------------------------------------------------------- put
+    def _commit_value(self, value) -> tuple[int, bytes]:
+        """Returns (object type, data field bytes)."""
+        if hasattr(value, "commit"):          # chunkable handle
+            root = value.commit(self.store)
+            return value.TYPE, root
+        if hasattr(value, "encode"):          # primitive
+            return value.TYPE, value.encode()
+        if isinstance(value, (bytes, bytearray, str)):
+            v = value.encode() if isinstance(value, str) else bytes(value)
+            return FString.TYPE, v
+        raise TypeError(f"unsupported value: {type(value)}")
+
+    def put(self, key: bytes, value, branch: str | None = None, *,
+            base_uid: bytes | None = None, context: bytes = b"",
+            guard_uid: bytes | None = None) -> bytes:
+        """M3 (branch put), M4 (FoC put on a base version), guarded put."""
+        key = _k(key)
+        if base_uid is not None:              # M4: fork-on-conflict path
+            bases: tuple[bytes, ...] = (base_uid,)
+            base_depth = load_fobject(self.store, base_uid).depth
+        else:
+            branch = branch or DEFAULT_BRANCH
+            head = self.branches.head(key, branch)
+            if guard_uid is not None and head != guard_uid:
+                raise GuardFailed(branch)
+            bases = (head,) if head else ()
+            base_depth = (load_fobject(self.store, head).depth
+                          if head else -1)
+        t, data = self._commit_value(value)
+        obj = make_fobject(self.store, t, key, data, bases, context,
+                           base_depth)
+        self.branches.on_new_version(key, obj.uid, bases)
+        if base_uid is None:
+            self.branches.set_head(key, branch, obj.uid)
+        return obj.uid
+
+    # ------------------------------------------------------------- get
+    def get(self, key: bytes, branch: str | None = None, *,
+            uid: bytes | None = None) -> ValueHandle | None:
+        """M1 (branch get) / M2 (version get)."""
+        key = _k(key)
+        if uid is None:
+            uid = self.branches.head(key, branch or DEFAULT_BRANCH)
+            if uid is None:
+                return None
+        return ValueHandle(self, load_fobject(self.store, uid))
+
+    # ----------------------------------------------------------- views
+    def list_keys(self) -> list[bytes]:                      # M8
+        return self.branches.keys()
+
+    def list_tagged_branches(self, key: bytes) -> dict[str, bytes]:  # M9
+        return self.branches.tagged(_k(key))
+
+    def list_untagged_branches(self, key: bytes) -> list[bytes]:     # M10
+        return self.branches.untagged(_k(key))
+
+    # ----------------------------------------------------------- forks
+    def fork(self, key: bytes, ref: str | bytes, new_branch: str) -> None:
+        """M11 (from branch) / M12 (from uid)."""
+        key = _k(key)
+        uid = (self.branches.head(key, ref) if isinstance(ref, str)
+               else ref)
+        assert uid is not None, f"no such ref: {ref!r}"
+        self.branches.fork(key, new_branch, uid)
+
+    def rename(self, key: bytes, old: str, new: str) -> None:   # M13
+        self.branches.rename(_k(key), old, new)
+
+    def remove(self, key: bytes, branch: str) -> None:          # M14
+        self.branches.remove(_k(key), branch)
+
+    # ----------------------------------------------------------- track
+    def track(self, key: bytes, ref: str | bytes,
+              dist_rng: tuple[int, int] = (0, 1 << 30)) -> list[FObject]:
+        """M15/M16: versions along the primary-parent chain whose distance
+        from the given head lies in dist_rng."""
+        key = _k(key)
+        uid = (self.branches.head(key, ref) if isinstance(ref, str)
+               else ref)
+        out: list[FObject] = []
+        d = 0
+        while uid is not None and d < dist_rng[1]:
+            obj = load_fobject(self.store, uid)
+            if d >= dist_rng[0]:
+                out.append(obj)
+            uid = obj.bases[0] if obj.bases else None
+            d += 1
+        return out
+
+    def lca(self, key: bytes, uid1: bytes, uid2: bytes):        # M17
+        return mg.lca(self.store, uid1, uid2)
+
+    # ------------------------------------------------------------ diff
+    def diff(self, uid1: bytes, uid2: bytes):
+        """Type-aware Diff of two versions (same type, any keys, §3.2)."""
+        o1 = load_fobject(self.store, uid1)
+        o2 = load_fobject(self.store, uid2)
+        if o1.type != o2.type:
+            raise TypeNotMatch(f"{o1.type_name()} vs {o2.type_name()}")
+        if o1.type in (ck.MAP, ck.SET):
+            t1 = POSTree.from_root(self.store, o1.type, o1.data, self.params)
+            t2 = POSTree.from_root(self.store, o2.type, o2.data, self.params)
+            return t1.diff_keys(t2)
+        if o1.type in (ck.BLOB, ck.LIST):
+            t1 = POSTree.from_root(self.store, o1.type, o1.data, self.params)
+            t2 = POSTree.from_root(self.store, o2.type, o2.data, self.params)
+            return [op for op in t1.diff_leaf_blocks(t2) if op[0] != "equal"]
+        return None if o1.data == o2.data else (o1.data, o2.data)
+
+    # ----------------------------------------------------------- merge
+    def merge(self, key: bytes, target, *refs, resolver=None,
+              context: bytes = b"") -> bytes:
+        """M5 Merge(key, tgt_branch, ref_branch); M6 Merge(key, tgt_branch,
+        ref_uid); M7 Merge(key, uid1, uid2, ...) for untagged heads."""
+        key = _k(key)
+        if isinstance(target, str):          # M5 / M6
+            tgt_uid = self.branches.head(key, target)
+            assert tgt_uid is not None
+            ref = refs[0]
+            ref_uid = (self.branches.head(key, ref) if isinstance(ref, str)
+                       else ref)
+            merged_uid = self._merge_versions(key, tgt_uid, ref_uid,
+                                              resolver, context)
+            self.branches.set_head(key, target, merged_uid)
+            return merged_uid
+        # M7: merge a collection of untagged heads pairwise
+        uids = [target, *refs]
+        acc = uids[0]
+        for u in uids[1:]:
+            acc = self._merge_versions(key, acc, u, resolver, context)
+        return acc
+
+    def _merge_versions(self, key: bytes, uid1: bytes, uid2: bytes,
+                        resolver, context: bytes) -> bytes:
+        o1 = load_fobject(self.store, uid1)
+        o2 = load_fobject(self.store, uid2)
+        if o1.type != o2.type:
+            raise TypeNotMatch(f"{o1.type_name()} vs {o2.type_name()}")
+        base_uid = mg.lca(self.store, uid1, uid2)
+        base = (load_fobject(self.store, base_uid)
+                if base_uid is not None else None)
+        t = o1.type
+        if t == ck.MAP:
+            bm = (FMap.from_tree(POSTree.from_root(self.store, t, base.data,
+                                                   self.params))
+                  if base is not None and base.type == t else None)
+            m1 = FMap.from_tree(POSTree.from_root(self.store, t, o1.data,
+                                                  self.params))
+            m2 = FMap.from_tree(POSTree.from_root(self.store, t, o2.data,
+                                                  self.params))
+            merged = mg.merge_map(self.store, bm, m1, m2, resolver)
+            data = merged.tree.root_cid
+        elif t == ck.SET:
+            bs = (FSet.from_tree(POSTree.from_root(self.store, t, base.data,
+                                                   self.params))
+                  if base is not None and base.type == t else None)
+            s1 = FSet.from_tree(POSTree.from_root(self.store, t, o1.data,
+                                                  self.params))
+            s2 = FSet.from_tree(POSTree.from_root(self.store, t, o2.data,
+                                                  self.params))
+            merged = mg.merge_set(self.store, bs, s1, s2, resolver)
+            data = merged.tree.root_cid
+        elif t in (ck.BLOB, ck.LIST):
+            bt = (POSTree.from_root(self.store, t, base.data, self.params)
+                  if base is not None and base.type == t else None)
+            t1 = POSTree.from_root(self.store, t, o1.data, self.params)
+            t2 = POSTree.from_root(self.store, t, o2.data, self.params)
+            merged_tree = mg.merge_linear(self.store, t, bt, t1, t2,
+                                          resolver, self.params)
+            data = merged_tree.root_cid
+        else:
+            data = mg.merge_primitive(t, base.data if base else None,
+                                      o1.data, o2.data, resolver)
+        depth = max(o1.depth, o2.depth)
+        obj = make_fobject(self.store, t, key, data, (uid1, uid2), context,
+                           depth)
+        self.branches.on_new_version(key, obj.uid, (uid1, uid2))
+        return obj.uid
+
+    # ----------------------------------------------------- verification
+    def verify_lineage(self, uid: bytes, ancestor: bytes,
+                       max_depth: int = 1 << 30) -> bool:
+        """Tamper-evidence check (§3.2): is `ancestor` in uid's history?
+        Walking hashes re-verifies integrity chunk by chunk when the store
+        runs with verify=True."""
+        frontier = [uid]
+        seen = set()
+        d = 0
+        while frontier and d < max_depth:
+            nxt = []
+            for u in frontier:
+                if u == ancestor:
+                    return True
+                if u in seen:
+                    continue
+                seen.add(u)
+                nxt.extend(load_fobject(self.store, u).bases)
+            frontier = nxt
+            d += 1
+        return ancestor in frontier
+
+
+def _k(key) -> bytes:
+    return key.encode() if isinstance(key, str) else bytes(key)

@@ -1,0 +1,43 @@
+"""Content hashing for cids/uids (paper §4.2.1).
+
+The paper uses SHA-256 by default and explicitly allows faster alternatives
+("e.g., BLAKE2"). We keep SHA-256 as the host default for externally
+verifiable tamper evidence, and expose a pluggable interface so the TPU
+dedup path can use the Pallas ``fphash`` kernel (see kernels/fphash.py and
+DESIGN.md §3 hardware-adaptation table).
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Callable
+
+# A cid is the raw 32-byte digest of chunk bytes.  We keep bytes (not hex)
+# internally; hex only at display boundaries.
+CID_LEN = 32
+
+HashFn = Callable[[bytes], bytes]
+
+
+def sha256(data: bytes) -> bytes:
+    return hashlib.sha256(data).digest()
+
+
+def blake2b_256(data: bytes) -> bytes:
+    return hashlib.blake2b(data, digest_size=32).digest()
+
+
+_DEFAULT: HashFn = sha256
+
+
+def set_default_hash(fn: HashFn) -> None:
+    global _DEFAULT
+    _DEFAULT = fn
+
+
+def content_hash(data: bytes) -> bytes:
+    """chunk.cid = H(chunk.bytes)  (paper §4.2.1)."""
+    return _DEFAULT(data)
+
+
+def hex(cid: bytes) -> str:
+    return cid.hex()[:16]  # short display form

@@ -1,0 +1,106 @@
+"""Cyclic-polynomial rolling hash for content-defined chunking (paper §4.3.2).
+
+    P(b_1..b_k) = s^{k-1}(h(b_1)) ^ s^{k-2}(h(b_2)) ^ ... ^ s^0(h(b_k))
+
+where ``h`` maps a byte to a pseudo-random word and ``s`` is a 1-bit barrel
+rotation.  A *pattern* occurs at stream position i when the low ``q`` bits of
+P over the window ending at i are all zero; the expected distance between
+patterns is 2^q bytes (the paper's default chunk size 4 KB -> q = 12).
+
+The paper defines the rotation within q bits; we rotate within a 32-bit word
+(classic buzhash) which has strictly better mixing and the identical boundary
+statistics — the pattern predicate only inspects the low q bits.  This is the
+numpy *reference*; kernels/chunker.py is the Pallas/TPU version and
+kernels/ref.py cross-checks both.
+
+The boundary bitmap is a pure function of the byte stream (the scan window
+slides continuously and never resets at cuts), which is the invariant that
+makes chunk boundaries stable under local edits and lets incremental commits
+splice back into the old chunk sequence (postree.py).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+WORD_BITS = 32
+_MASK32 = np.uint32(0xFFFFFFFF)
+
+
+def mix32(x: np.ndarray) -> np.ndarray:
+    """murmur3 finalizer — a bijective 32-bit mixer computable with pure
+    vector-ALU ops, so the Pallas kernel evaluates h(byte) arithmetically
+    instead of gathering from a table (TPU adaptation, DESIGN.md §3)."""
+    x = x.astype(np.uint32)
+    with np.errstate(over="ignore"):
+        x ^= x >> np.uint32(16)
+        x *= np.uint32(0x85EBCA6B)
+        x ^= x >> np.uint32(13)
+        x *= np.uint32(0xC2B2AE35)
+        x ^= x >> np.uint32(16)
+    return x
+
+
+def byte_table(seed: int = 0xF0B) -> np.ndarray:
+    """Deterministic h: byte -> u32 table shared by reference and kernels
+    (table[b] = mix32(b + seed*GOLDEN))."""
+    base = np.arange(256, dtype=np.uint64) + np.uint64(seed) * np.uint64(0x9E3779B9)
+    return mix32((base & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+
+
+_TABLE = byte_table()
+
+
+def _rotl(x: np.ndarray, r: int) -> np.ndarray:
+    r %= WORD_BITS
+    if r == 0:
+        return x
+    return ((x << np.uint32(r)) | (x >> np.uint32(WORD_BITS - r))) & _MASK32
+
+
+def rolling_hash(data: np.ndarray, window: int) -> np.ndarray:
+    """P_i over the window ending at i, for all i >= window-1 (else 0).
+
+    data: uint8[n].  Returns uint32[n]; positions < window-1 are 0 and never
+    treated as boundaries (no full window yet).
+    """
+    data = np.ascontiguousarray(data, dtype=np.uint8)
+    n = data.shape[0]
+    h = _TABLE[data]  # u32[n]
+    acc = np.zeros(n, dtype=np.uint32)
+    # P_i = XOR_{j=0..k-1} rotl(h[i-j], j): k vectorized passes (k ~ 48).
+    for j in range(window):
+        if j == 0:
+            acc ^= h
+        else:
+            acc[j:] ^= _rotl(h[:-j] if j else h, j)
+    if window > 1:
+        acc[: window - 1] = 0
+    return acc
+
+
+def boundary_bitmap(data: np.ndarray, window: int, q: int) -> np.ndarray:
+    """bool[n]: True at i iff a pattern ends at byte i (paper's predicate
+    ``P & (2^q - 1) == 0``).  Positions without a full window are False."""
+    p = rolling_hash(data, window)
+    mask = np.uint32((1 << q) - 1)
+    hits = (p & mask) == 0
+    if window > 1:
+        hits[: window - 1] = False
+    return hits
+
+
+def rolling_hash_serial(data: bytes, window: int) -> np.ndarray:
+    """O(n) serial recursive form (paper's amortized update rule):
+        P_i = s(P_{i-1}) ^ s^k(h(b_{i-k})) ^ h(b_i)
+    Used by tests to validate the vectorized form."""
+    n = len(data)
+    out = np.zeros(n, dtype=np.uint32)
+    h = _TABLE[np.frombuffer(data, dtype=np.uint8)] if n else np.zeros(0, np.uint32)
+    p = np.uint32(0)
+    for i in range(n):
+        p = _rotl(np.uint32(p), 1) ^ np.uint32(h[i])
+        if i >= window:
+            p ^= _rotl(np.uint32(h[i - window]), window % WORD_BITS)
+        if i >= window - 1:
+            out[i] = p
+    return out

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: 256-bit content hash for the dedup path
+(DESIGN.md §3: SHA-256's bit-level structure is hostile to the TPU VPU;
+the paper explicitly allows alternative hash functions for cids).
+
+Sponge over u32 words: the state is one native (8, 128) u32 vreg tile;
+each 4 KB block is absorbed by XOR and diffused with FP_ROUNDS rounds of
+{multiply by odd constant, xor-rotate, lane-roll add, sublane-roll add} —
+all elementwise or roll ops the VPU executes natively.  The grid walks
+blocks sequentially (TPU grids are serial), carrying the state in a VMEM
+scratch accumulator; the final step injects the length, folds lanes and
+finalizes.
+
+Bit-for-bit identical to ref.fphash_ref (the numpy oracle).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import FP_BLOCK_WORDS, FP_ROUNDS, FP_STATE, fp_init_state
+
+_GOLD = 0x9E3779B9
+_M1 = 0x85EBCA6B
+_M2 = 0xC2B2AE35
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def _mix32(x):
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(_M1)
+    x = x ^ (x >> jnp.uint32(13))
+    x = x * jnp.uint32(_M2)
+    return x ^ (x >> jnp.uint32(16))
+
+
+def _rotr(x, r: int):
+    r &= 31
+    if r == 0:
+        return x
+    return (x >> jnp.uint32(r)) | (x << jnp.uint32(32 - r))
+
+
+def _round(state):
+    state = state * jnp.uint32(_GOLD)
+    state = state ^ _rotr(state, 13)
+    state = state + pltpu_roll(state, 1, axis=1)
+    state = state ^ _rotr(state, 7)
+    state = state + pltpu_roll(state, 1, axis=0)
+    return state
+
+
+def pltpu_roll(x, shift: int, axis: int):
+    """np.roll equivalent; lane/sublane rotates are native TPU ops."""
+    return jnp.roll(x, shift, axis=axis)
+
+
+def _fphash_kernel(words_ref, len_ref, init_ref, out_ref, state_ref, *,
+                   nblocks: int):
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _init():
+        state_ref[...] = init_ref[...]
+
+    state = state_ref[...] ^ words_ref[...].reshape(FP_STATE)
+    for _ in range(FP_ROUNDS):
+        state = _round(state)
+    state_ref[...] = state
+
+    @pl.when(b == nblocks - 1)
+    def _finalize():
+        st = state_ref[...] ^ len_ref[0].astype(jnp.uint32)
+        st = _round(_round(st))
+        folded = st
+        shift = 64
+        while shift >= 1:   # xor-reduce 128 lanes, log-depth
+            folded = folded ^ pltpu_roll(folded, shift, axis=1)
+            shift //= 2
+        digest = folded[:, 0]
+        digest = _mix32(digest ^ (jax.lax.iota(jnp.uint32, 8) * jnp.uint32(_GOLD)))
+        out_ref[...] = digest
+
+
+@functools.partial(jax.jit, static_argnames=("nblocks",))
+def _run(words, length, init, *, nblocks: int):
+    return pl.pallas_call(
+        functools.partial(_fphash_kernel, nblocks=nblocks),
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec((1, FP_BLOCK_WORDS), lambda b: (b, 0)),
+                  pl.BlockSpec((1,), lambda b: (0,)),
+                  pl.BlockSpec(FP_STATE, lambda b: (0, 0))],
+        out_specs=pl.BlockSpec((8,), lambda b: (0,)),
+        out_shape=jax.ShapeDtypeStruct((8,), jnp.uint32),
+        scratch_shapes=[pltpu.VMEM(FP_STATE, jnp.uint32)],
+        interpret=_INTERPRET,
+    )(words, length, init)
+
+
+def fphash(data: bytes) -> bytes:
+    """256-bit content hash of `data` (the Pallas dedup-path cid)."""
+    n = len(data)
+    nblocks = max(1, -(-max(n, 1) // (FP_BLOCK_WORDS * 4)))
+    buf = np.zeros(nblocks * FP_BLOCK_WORDS * 4, dtype=np.uint8)
+    buf[:n] = np.frombuffer(data, dtype=np.uint8)
+    words = buf.view("<u4").astype(np.uint32).reshape(nblocks,
+                                                      FP_BLOCK_WORDS)
+    out = _run(words, jnp.asarray([n & 0xFFFFFFFF], dtype=jnp.uint32),
+               jnp.asarray(fp_init_state(), dtype=jnp.uint32),
+               nblocks=nblocks)
+    return np.asarray(out).astype("<u4").tobytes()

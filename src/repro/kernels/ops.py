@@ -1,0 +1,43 @@
+"""jit'd public wrappers for the Pallas kernels + engine integration.
+
+``use_pallas_chunker()`` flips the whole storage engine (core.chunker) to
+the Pallas boundary kernel; ``use_pallas_hash()`` switches cid hashing to
+the fphash kernel (dedup path — see DESIGN.md §3 for the two-tier hash
+policy).  Both are opt-in so the default engine stays dependency-light.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import chunker as _core_chunker
+from repro.core import hashing as _core_hashing
+from repro.core import rolling as _core_rolling
+
+from .chunker import boundary_bitmap_pallas
+from .fphash import fphash
+from .ref import boundary_bitmap_ref, fphash_ref
+
+
+def boundary_bitmap(data, window: int = 48, q: int = 12) -> np.ndarray:
+    """Pallas-accelerated content-defined chunk boundary bitmap."""
+    return boundary_bitmap_pallas(np.asarray(data, dtype=np.uint8),
+                                  window, q)
+
+
+def content_hash(data: bytes) -> bytes:
+    """Pallas-accelerated 256-bit content hash (dedup-path cid)."""
+    return fphash(bytes(data))
+
+
+def use_pallas_chunker(enable: bool = True) -> None:
+    _core_chunker.set_bitmap_impl(
+        boundary_bitmap_pallas if enable else _core_rolling.boundary_bitmap)
+
+
+def use_pallas_hash(enable: bool = True) -> None:
+    _core_hashing.set_default_hash(
+        content_hash if enable else _core_hashing.sha256)
+
+
+__all__ = ["boundary_bitmap", "content_hash", "use_pallas_chunker",
+           "use_pallas_hash", "boundary_bitmap_ref", "fphash_ref"]

@@ -1,0 +1,77 @@
+"""Pure-numpy/jnp oracles for the Pallas kernels.
+
+  * boundary_bitmap_ref — cyclic-polynomial rolling-hash pattern bitmap
+    (identical to repro.core.rolling, the storage engine's CPU path);
+  * fphash_ref          — 256-bit TPU-native content hash (dedup path).
+
+tests/test_kernels.py sweeps shapes/dtypes and asserts the Pallas kernels
+(interpret=True) match these bit-for-bit.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import rolling
+
+# ------------------------------------------------------------- chunker ref
+
+def boundary_bitmap_ref(data: np.ndarray, window: int, q: int) -> np.ndarray:
+    return rolling.boundary_bitmap(np.asarray(data, dtype=np.uint8),
+                                   window, q)
+
+
+# ------------------------------------------------------------- fphash ref
+
+FP_ROUNDS = 4
+FP_BLOCK_WORDS = 1024            # 4 KB per absorb block
+FP_STATE = (8, 128)              # u32 sponge state = one native vreg tile
+_GOLD = np.uint32(0x9E3779B9)
+
+
+def _rotr(x: np.ndarray, r: int) -> np.ndarray:
+    r &= 31
+    if r == 0:
+        return x
+    return ((x >> np.uint32(r)) | (x << np.uint32(32 - r))) \
+        & np.uint32(0xFFFFFFFF)
+
+
+def fp_init_state() -> np.ndarray:
+    idx = np.arange(8 * 128, dtype=np.uint32).reshape(FP_STATE)
+    return rolling.mix32(idx + _GOLD)
+
+
+def fp_round(state: np.ndarray) -> np.ndarray:
+    """One diffusion round: multiply, xor-rotate, cross-lane/sublane mix.
+    All ops are elementwise or lane/sublane rolls — native on the TPU VPU."""
+    with np.errstate(over="ignore"):
+        state = (state * _GOLD) & np.uint32(0xFFFFFFFF)
+        state ^= _rotr(state, 13)
+        state = (state + np.roll(state, 1, axis=1)) & np.uint32(0xFFFFFFFF)
+        state ^= _rotr(state, 7)
+        state = (state + np.roll(state, 1, axis=0)) & np.uint32(0xFFFFFFFF)
+    return state
+
+
+def fphash_ref(data: bytes) -> bytes:
+    """256-bit keyed content hash: zero-pad to a 4 KB block multiple,
+    absorb blocks Merkle–Damgard style, inject the true length, fold."""
+    n = len(data)
+    nblocks = max(1, -(-max(n, 1) // (FP_BLOCK_WORDS * 4)))
+    buf = np.zeros(nblocks * FP_BLOCK_WORDS * 4, dtype=np.uint8)
+    buf[:n] = np.frombuffer(data, dtype=np.uint8)
+    words = buf.view("<u4").astype(np.uint32)
+    state = fp_init_state()
+    for b in range(nblocks):
+        blk = words[b * FP_BLOCK_WORDS:(b + 1) * FP_BLOCK_WORDS]
+        state = state ^ blk.reshape(FP_STATE)
+        for _ in range(FP_ROUNDS):
+            state = fp_round(state)
+    state = state ^ np.uint32(n & 0xFFFFFFFF)
+    state = fp_round(fp_round(state))
+    # fold 8x128 -> 8 words: xor-reduce lanes, then finalize
+    folded = state[:, 0]
+    for c in range(1, 128):
+        folded = folded ^ state[:, c]
+    folded = rolling.mix32(folded ^ (np.arange(8, dtype=np.uint32) * _GOLD))
+    return folded.astype("<u4").tobytes()

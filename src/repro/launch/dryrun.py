@@ -1,0 +1,294 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count at first
+# init.  512 host devices back the 2x16x16 production mesh; smoke tests and
+# benches never import this module and keep seeing 1 device.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from functools import partial  # noqa: E402
+from pathlib import Path       # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp        # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs import ARCHS, SHAPES, input_specs, shapes_for  # noqa: E402
+from ..roofline import analyze_hlo                            # noqa: E402
+from ..models import model as model_mod                       # noqa: E402
+from ..shardings import Sharding                              # noqa: E402
+from ..train import AdamWConfig, init_train_state, make_train_step  # noqa: E402
+from .mesh import make_production_mesh                        # noqa: E402
+
+"""Multi-pod dry-run (deliverable e): for EVERY (architecture x input
+shape) cell, ``jit(step).lower(**ShapeDtypeStructs).compile()`` must
+succeed on the 16x16 single-pod mesh AND the 2x16x16 multi-pod mesh.
+
+No arrays are ever materialized: model/optimizer state comes from
+jax.eval_shape over the init functions; inputs from configs.input_specs.
+Each cell's memory_analysis / cost_analysis / collective-op census is
+written to experiments/dryrun/<arch>__<shape>__<mesh>.json — the roofline
+analysis (repro/roofline.py, EXPERIMENTS.md §Roofline) consumes these.
+"""
+
+OUTDIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every tensor literal like bf16[2,512,128] in an
+    HLO result-shape string (handles tuples)."""
+    sizes = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2,
+             "u16": 2, "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8,
+             "u64": 8, "c64": 8}
+    total = 0
+    for m in re.finditer(r"(\w+)\[([\d,]*)\]", text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in sizes:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * sizes[dt]
+    return total
+
+
+def parse_collectives(hlo: str) -> dict:
+    """Loop-aware collective census over optimized per-device HLO.
+
+    Computations are scanned for collective ops; while-loop bodies are
+    multiplied by their trip count (recovered from the loop condition's
+    comparison constant — scan lowers to a counted while).
+    """
+    comps: dict[str, list] = {}
+    cur = None
+    trip_const: dict[str, int] = {}
+    for line in hlo.splitlines():
+        m = re.match(r"^%?([\w\.\-]+)[^=]*\{\s*$", line.strip())
+        if not line.startswith(" ") and ("{" in line) and ("=" not in line.split("{")[0]):
+            name = line.split("{")[0].strip().lstrip("%").split(" ")[0]
+            name = name.split("(")[0].rstrip(".0123456789") or name
+            cur = line.split("(")[0].strip().lstrip("%")
+            comps.setdefault(cur, [])
+            continue
+        if cur is None:
+            continue
+        ls = line.strip()
+        for op in COLLECTIVES:
+            if re.search(rf"= [^=]*\b{op}\(", ls) or \
+                    re.search(rf"\b{op}-(start|done)\(", ls):
+                shape_part = ls.split("=")[1] if "=" in ls else ls
+                shape_part = shape_part.split(op)[0]
+                comps[cur].append((op, _shape_bytes(shape_part)))
+                break
+        cm = re.search(r"compare\([^)]*\).*direction=LT", ls)
+        if "constant(" in ls and cur:
+            mc = re.search(r"s32\[\] constant\((\d+)\)", ls)
+            if mc:
+                trip_const[cur] = max(trip_const.get(cur, 0),
+                                      int(mc.group(1)))
+
+    # find while ops: body=..., condition=...
+    whiles = re.findall(r"while\([^)]*\), condition=%?([\w\.\-]+), "
+                        r"body=%?([\w\.\-]+)", hlo)
+    body_trip = {}
+    for cond, body in whiles:
+        body_trip[body] = max(trip_const.get(cond, 1), 1)
+
+    per_op = {op: 0 for op in COLLECTIVES}
+    counts = {op: 0 for op in COLLECTIVES}
+    for comp, ops in comps.items():
+        mult = body_trip.get(comp, 1)
+        for op, nbytes in ops:
+            per_op[op] += nbytes * mult
+            counts[op] += mult
+    return {"bytes_per_op": per_op, "counts": counts,
+            "total_bytes": sum(per_op.values()),
+            "n_while_bodies": len(body_trip)}
+
+
+def eval_state_specs(cfg, shd):
+    state_shapes = jax.eval_shape(
+        partial(init_train_state, cfg, shards=shd.tp),
+        jax.random.PRNGKey(0))
+    return state_shapes, shd.state_specs(state_shapes)
+
+
+def _named(mesh, tree_specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               microbatch: int = 1, variant: str = "base",
+               overrides: dict | None = None) -> dict:
+    import dataclasses
+    cfg = ARCHS[arch]
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shd = Sharding(mesh, cfg, shape.global_batch)
+    ispecs = input_specs(cfg, shape)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        state_shapes, sspecs = eval_state_specs(cfg, shd)
+        mb = microbatch if microbatch > 1 else cfg.train_microbatch
+        step = make_train_step(cfg, shd, AdamWConfig(), microbatch=mb)
+        bspecs = shd.batch_specs(ispecs)
+        jfn = jax.jit(step,
+                      in_shardings=(_named(mesh, sspecs),
+                                    _named(mesh, bspecs)),
+                      out_shardings=(_named(mesh, sspecs), None),
+                      donate_argnums=(0,))
+        with mesh:
+            lowered = jfn.lower(state_shapes, ispecs)
+    else:
+        params_shapes = jax.eval_shape(
+            partial(model_mod.init_params, cfg, shards=shd.tp),
+            jax.random.PRNGKey(0))
+        pspecs = shd.param_specs(params_shapes)
+        if shape.kind == "prefill":
+            def fn(params, batch):
+                return model_mod.prefill(params, batch, cfg, shd)
+            bspecs = shd.batch_specs(ispecs)
+            jfn = jax.jit(fn, in_shardings=(_named(mesh, pspecs),
+                                            _named(mesh, bspecs)))
+            with mesh:
+                lowered = jfn.lower(params_shapes, ispecs)
+        else:                                  # decode
+            cache_shapes = jax.eval_shape(
+                partial(model_mod.init_cache, cfg, shape.global_batch,
+                        shape.seq_len))
+            cspecs = shd.cache_specs(cache_shapes)
+
+            def fn(params, cache, batch):
+                return model_mod.decode_step(params, cache, batch, cfg, shd)
+            bspecs = shd.batch_specs(ispecs)
+            jfn = jax.jit(fn, in_shardings=(_named(mesh, pspecs),
+                                            _named(mesh, cspecs),
+                                            _named(mesh, bspecs)),
+                          donate_argnums=(1,))
+            with mesh:
+                lowered = jfn.lower(params_shapes, cache_shapes, ispecs)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    print(mem)                                # proves it fits
+    ca = compiled.cost_analysis() or {}
+    print({k: ca[k] for k in sorted(ca) if not k.endswith("}")})
+
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+    loop_aware = analyze_hlo(hlo)
+    n_chips = 512 if multi_pod else 256
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "variant": variant,
+        "microbatch": microbatch if microbatch > 1 else cfg.train_microbatch,
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_per_device_gb": round(
+                (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                 + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+                / 2**30, 3),
+        },
+        "cost": {"flops_per_device": ca.get("flops", 0.0),
+                 "bytes_per_device": ca.get("bytes accessed", 0.0),
+                 "transcendentals": ca.get("transcendentals", 0.0)},
+        "collectives": coll,
+        "loop_aware": loop_aware,
+        "params_total": cfg.params_count(),
+        "params_active": cfg.active_params_count(),
+        "tokens_per_step": (shape.global_batch * shape.seq_len
+                            if shape.kind != "decode"
+                            else shape.global_batch),
+        "kind": shape.kind,
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg overrides for perf variants, e.g. "
+                         "moe_impl=onehot remat_policy=dots kv_quant=0")
+    args = ap.parse_args()
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        overrides[k] = (int(v) if v.lstrip("-").isdigit()
+                        else v == "True" if v in ("True", "False") else v)
+    if "kv_quant" in overrides:
+        overrides["kv_quant"] = bool(overrides["kv_quant"])
+    if "fsdp" in overrides:
+        overrides["fsdp"] = bool(overrides["fsdp"])
+
+    OUTDIR.mkdir(parents=True, exist_ok=True)
+    archs = [args.arch] if args.arch else list(ARCHS)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    failures = []
+    for arch in archs:
+        cfg = ARCHS[arch]
+        shapes = [args.shape] if args.shape else shapes_for(cfg)
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+                if args.variant != "base":
+                    tag += f"__{args.variant}"
+                out = OUTDIR / f"{tag}.json"
+                if out.exists() and not args.force:
+                    print(f"[skip] {tag}")
+                    continue
+                print(f"[run ] {tag} ...", flush=True)
+                try:
+                    res = lower_cell(arch, shape, mp,
+                                     microbatch=args.microbatch,
+                                     variant=args.variant,
+                                     overrides=overrides)
+                    out.write_text(json.dumps(res, indent=1))
+                    print(f"[ ok ] {tag}: compile={res['compile_s']}s "
+                          f"peak={res['memory']['peak_per_device_gb']}GB "
+                          f"flops/dev={res['cost']['flops_per_device']:.3g} "
+                          f"coll={res['collectives']['total_bytes']:.3g}B",
+                          flush=True)
+                except Exception as e:
+                    failures.append((tag, repr(e)))
+                    print(f"[FAIL] {tag}: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for t, e in failures:
+            print(" ", t, e[:200])
+        raise SystemExit(1)
+    print("\nDRY-RUN: all requested cells lowered + compiled.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Defined as a FUNCTION so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before the first jax device query).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (TPU v5e pod), axes (data, model).
+    Multi-pod: 2x16x16 = 512 chips, axes (pod, data, model) — the 'pod'
+    axis is pure DP across the DCN/ICI-linked pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh_for(n_devices: int, model_axis: int = 16):
+    """Elastic helper: best mesh for whatever devices survive (runtime/
+    elastic.py re-shards checkpoints onto this after a failure)."""
+    model = min(model_axis, n_devices)
+    while n_devices % model:
+        model //= 2
+    data = n_devices // model
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,61 @@
+"""Training launcher.
+
+On a real TPU fleet this process runs per host under the production mesh
+(mesh.make_production_mesh); on this CPU container it drives the same code
+path at reduced scale (--smoke).  Checkpoints stream into ForkBase; any
+crash resumes from the branch head (runtime/controller.py).
+
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --steps 50 --smoke
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from ..ckpt import CheckpointStore
+from ..configs import ARCHS, smoke as smoke_cfg
+from ..runtime.controller import FailurePlan, TrainController
+from ..shardings import Sharding
+from ..train import AdamWConfig, init_train_state, make_train_step
+from ..train.data import SyntheticLM
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b",
+                    choices=sorted(ARCHS))
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--branch", default="run")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-feasible)")
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch]
+    if args.smoke or jax.default_backend() == "cpu":
+        cfg = smoke_cfg(cfg)
+    shd = Sharding(None, cfg)
+    state = init_train_state(cfg, jax.random.PRNGKey(0), shards=4)
+    ds = SyntheticLM(cfg.vocab, args.seq, args.batch,
+                     frontend=cfg.frontend, n_patches=cfg.n_patches,
+                     d_model=cfg.d_model)
+    step = jax.jit(make_train_step(
+        cfg, shd, AdamWConfig(lr=args.lr, warmup_steps=10,
+                              total_steps=args.steps),
+        microbatch=1))
+    ctl = TrainController(step, state, ds, CheckpointStore(),
+                          branch=args.branch, ckpt_every=args.ckpt_every)
+    ctl.run(args.steps)
+    losses = [l for _, l in ctl.metrics_log]
+    print(f"{cfg.name}: {args.steps} steps, loss {losses[0]:.3f} -> "
+          f"{losses[-1]:.3f}; ckpt dedup "
+          f"{ctl.ckpt.dedup_stats.dedup_ratio:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

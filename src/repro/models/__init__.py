@@ -1,0 +1,3 @@
+from . import layers, model, moe, ssm, xlstm
+from .model import (backbone, decode_step, embed_inputs, init_cache,
+                    init_params, lm_loss, prefill, train_loss)

@@ -1,0 +1,299 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (flash-style
+double-scan, memory-bounded), SwiGLU/GELU MLP.
+
+Attention uses an online-softmax block algorithm (outer scan over query
+blocks, inner scan over KV blocks) so the S x S score matrix never
+materializes — mandatory for prefill_32k and the 4k training shapes at
+production batch.  The same machinery accepts an additive per-block decay
+bias, which models/xlstm.py reuses for the parallel mLSTM form.
+
+GQA + TP head padding: when n_heads is not a multiple of the model-axis
+size (qwen2-7b: 28 heads on a 16-way axis) each KV group is padded with
+zero-weight query heads (wq columns and wo rows are zero), which keeps the
+math exact while making the padded head count divide the axis.  KV heads
+are repeated per group before flash attention (activation-only cost, freed
+by remat); the decode path keeps the grouped form and never repeats the
+cache.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def rms_norm(x, w, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w).astype(dt)
+
+
+def rope_freqs(dh: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+
+
+def apply_rope(x, pos, theta: float):
+    """x (..., S, H, dh); pos (..., S) int32 positions."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                    # (dh/2,)
+    ang = pos[..., None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def _blockify(x, block, axis=1):
+    n = x.shape[axis]
+    nb = n // block
+    shape = x.shape[:axis] + (nb, block) + x.shape[axis + 1:]
+    return x.reshape(shape), nb
+
+
+def flash_attention(q, k, v, *, causal: bool = True, q_block: int = 512,
+                    kv_block: int = 1024, decay: tuple | None = None,
+                    softmax_scale: float | None = None,
+                    mlstm_norm: bool = False):
+    """Online-softmax attention; q/k/v: (B, S, H, dh) (KV pre-repeated).
+
+    decay: optional (F, i_gate) arrays (B, S, H) adding the mLSTM bias
+    D_ij = F_i - F_j + i_j to the pre-softmax logits (xlstm.py);
+    mlstm_norm uses the mLSTM denominator max(|l|, exp(-m)).
+
+    Memory: O(q_block x kv_block) per (batch, head) — outer scan over query
+    blocks, inner scan over KV blocks carrying (acc, m, l).
+    """
+    B, Sq, H, dh = q.shape
+    Skv = k.shape[1]
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(dh)
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Skv)
+    assert Sq % q_block == 0 and Skv % kv_block == 0
+
+    qb, nq = _blockify(q, q_block)                  # (B, nq, qb, H, dh)
+    kb, nk = _blockify(k, kv_block)                 # (B, nk, kb, H, dh)
+    vb, _ = _blockify(v, kv_block)
+    if decay is not None:
+        F, ig = decay                               # (B, S, H)
+        Fq, _ = _blockify(F, q_block)
+        Fk, _ = _blockify(F, kv_block)
+        igk, _ = _blockify(ig, kv_block)
+
+    def q_step(_, qi):
+        qc = qb[:, qi].astype(jnp.float32)          # (B, qb, H, dh)
+        m0 = jnp.full((B, q_block, H), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, q_block, H), jnp.float32)
+        a0 = jnp.zeros((B, q_block, H, dh), jnp.float32)
+
+        def kv_step(carry, ki):
+            acc, m, l = carry
+            kc = kb[:, ki].astype(jnp.float32)
+            vc = vb[:, ki].astype(jnp.float32)
+            s = jnp.einsum("bqhd,bphd->bqhp", qc, kc) * scale
+            if decay is not None:
+                d = (Fq[:, qi][:, :, None, :]       # (B,qb,1,H)
+                     - Fk[:, ki][:, None, :, :]     # (B,1,kb,H)
+                     + igk[:, ki][:, None, :, :])   # -> (B,qb,kb,H)
+                s = s + jnp.moveaxis(d, -1, 2)      # (B,qb,H,kb)
+            if causal:
+                qpos = qi * q_block + jnp.arange(q_block)
+                kpos = ki * kv_block + jnp.arange(kv_block)
+                mask = qpos[:, None] >= kpos[None, :]
+                s = jnp.where(mask[None, :, None, :], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(jnp.isfinite(s), p, 0.0)
+            corr = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+            corr = jnp.where(jnp.isfinite(m), corr, 0.0)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = (acc * corr[..., None]
+                       + jnp.einsum("bqhp,bphd->bqhd", p, vc))
+            return (acc_new, m_new, l_new), ()
+
+        (acc, m, l), _ = lax.scan(jax.checkpoint(kv_step, prevent_cse=False),
+                                  (a0, m0, l0), jnp.arange(nk))
+        if mlstm_norm:
+            denom = jnp.maximum(jnp.abs(l), jnp.exp(-jnp.where(
+                jnp.isfinite(m), m, 0.0))) + 1e-6
+        else:
+            denom = jnp.maximum(l, 1e-30)
+        return (), acc / denom[..., None]
+
+    _, out = lax.scan(jax.checkpoint(q_step, prevent_cse=False), (),
+                      jnp.arange(nq))            # (nq, B, qb, H, dh)
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Sq, H, dh)
+    return out.astype(q.dtype)
+
+
+def quantize_kv(x):
+    """(..., dh) -> int8 values + fp32 per-(...,) scale."""
+    import jax.numpy as jnp
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q, scale):
+    import jax.numpy as jnp
+    return q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+
+
+def repeat_kv(k, groups: int):
+    """(B, S, KV, dh) -> (B, S, KV*groups, dh), group-aligned."""
+    B, S, KV, dh = k.shape
+    k = jnp.broadcast_to(k[:, :, :, None, :], (B, S, KV, groups, dh))
+    return k.reshape(B, S, KV * groups, dh)
+
+
+def attention_block(p, x, cfg, shd, pos=None, cache=None):
+    """Attention sublayer (pre-norm applied by caller).
+
+    Train/prefill: pos None.  Decode: x (B, 1, d), pos (B,), cache
+    {'k','v'}: (B, T, KV, dh), functionally updated.
+    Returns (out, new_cache or None).
+    """
+    B, S, _ = x.shape
+    KV, dh = cfg.n_kv_heads, cfg.dh
+    Hp = p["wq"].shape[1] // dh                     # padded head count
+    G = Hp // KV
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, Hp, dh)
+    k = k.reshape(B, S, KV, dh)
+    v = v.reshape(B, S, KV, dh)
+    pvec = jnp.arange(S)[None, :] if pos is None else pos[:, None]
+    q = apply_rope(q, pvec, cfg.rope_theta)
+    k = apply_rope(k, pvec, cfg.rope_theta)
+
+    if cache is not None and pos is not None:       # ---- decode
+        quant = "ks" in cache
+
+        def row(cr, nr, pr):
+            return lax.dynamic_update_slice(
+                cr, nr, (pr,) + (0,) * (cr.ndim - 1))
+        if quant:
+            kq, ksc = quantize_kv(k)
+            vq, vsc = quantize_kv(v)
+            ck = jax.vmap(row)(cache["k"], kq, pos)
+            cv = jax.vmap(row)(cache["v"], vq, pos)
+            cks = jax.vmap(row)(cache["ks"], ksc, pos)
+            cvs = jax.vmap(row)(cache["vs"], vsc, pos)
+            kf = dequantize_kv(ck, cks)
+            vf = dequantize_kv(cv, cvs)
+            new_cache = {"k": ck, "v": cv, "ks": cks, "vs": cvs}
+        else:
+            ck = jax.vmap(row)(cache["k"], k, pos)
+            cv = jax.vmap(row)(cache["v"], v, pos)
+            kf, vf = ck.astype(jnp.float32), cv.astype(jnp.float32)
+            new_cache = {"k": ck, "v": cv}
+        kf = shd.constrain(kf, "batch", "cache_seq", None, None)
+        vf = shd.constrain(vf, "batch", "cache_seq", None, None)
+        T = kf.shape[1]
+        qf = q.reshape(B, KV, G, dh).astype(jnp.float32)
+        s = jnp.einsum("bkgd,btkd->bkgt", qf, kf)
+        s = s / math.sqrt(dh)
+        mask = jnp.arange(T)[None, :] <= pos[:, None]       # (B, T)
+        s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+        w = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+        o = jnp.einsum("bkgt,btkd->bkgd", w, vf)
+        o = o.reshape(B, 1, Hp, dh).astype(x.dtype)
+    else:                                            # ---- train / prefill
+        q = shd.constrain(q, "batch", "seq", "heads", None)
+        kf = repeat_kv(k, G)
+        vf = repeat_kv(v, G)
+        kf = shd.constrain(kf, "batch", "seq", "heads", None)
+        vf = shd.constrain(vf, "batch", "seq", "heads", None)
+        o = flash_attention(q, kf, vf, causal=True)
+        o = shd.constrain(o, "batch", "seq", "heads", None)
+        if cache is not None:                        # prefill fills cache
+            T = cache["k"].shape[1]
+            pad = ((0, 0), (0, T - S), (0, 0), (0, 0))
+            if "ks" in cache:
+                kq, ksc = quantize_kv(k)
+                vq, vsc = quantize_kv(v)
+                pad3 = pad[:-1]
+                new_cache = {"k": jnp.pad(kq, pad), "v": jnp.pad(vq, pad),
+                             "ks": jnp.pad(ksc, pad3),
+                             "vs": jnp.pad(vsc, pad3)}
+            else:
+                new_cache = {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+        else:
+            new_cache = None
+    out = jnp.einsum("bsh,hd->bsd", o.reshape(B, S, Hp * dh), p["wo"])
+    return out, new_cache
+
+
+def mlp_block(p, x, cfg, shd):
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"])
+    if cfg.act == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = shd.constrain(h, "batch", "seq", "ff")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_out"])
+
+
+# ------------------------------------------------------------------- init
+
+def padded_heads(cfg, shards: int = 16) -> int:
+    """Padded per-group head count * KV (see module docstring)."""
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    G = H // KV
+    Hp = H
+    if H % shards != 0 and H > shards:
+        # pad per-group so total padded heads divide `shards`
+        Gp = G
+        while (KV * Gp) % shards != 0:
+            Gp += 1
+        Hp = KV * Gp
+    return Hp
+
+
+def init_attention(key, cfg, shards: int = 16):
+    d, H, KV, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    Hp = padded_heads(cfg, shards)
+    G, Gp = H // KV, Hp // KV
+    ks = jax.random.split(key, 4)
+    std = d ** -0.5
+    # generate (d, KV, Gp, dh) with zeros at g >= G, then flatten
+    wq = jax.random.normal(ks[0], (d, KV, Gp, dh), jnp.float32) * std
+    wo = jax.random.normal(ks[3], (KV, Gp, dh, d), jnp.float32) * (H * dh) ** -0.5
+    if Gp != G:
+        wq = wq.at[:, :, G:, :].set(0.0)
+        wo = wo.at[:, G:, :, :].set(0.0)
+    p = {"wq": wq.reshape(d, Hp * dh).astype(jnp.bfloat16),
+         "wk": (jax.random.normal(ks[1], (d, KV * dh)) * std
+                ).astype(jnp.bfloat16),
+         "wv": (jax.random.normal(ks[2], (d, KV * dh)) * std
+                ).astype(jnp.bfloat16),
+         "wo": wo.reshape(Hp * dh, d).astype(jnp.bfloat16)}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((Hp * dh,), jnp.bfloat16)
+        p["bk"] = jnp.zeros((KV * dh,), jnp.bfloat16)
+        p["bv"] = jnp.zeros((KV * dh,), jnp.bfloat16)
+    return p
+
+
+def init_mlp(key, cfg, d_ff=None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_in": (jax.random.normal(ks[0], (d, f)) * d ** -0.5
+                  ).astype(jnp.bfloat16),
+         "w_out": (jax.random.normal(ks[1], (f, d)) * f ** -0.5
+                   ).astype(jnp.bfloat16)}
+    if cfg.act == "swiglu":
+        p["w_gate"] = (jax.random.normal(ks[2], (d, f)) * d ** -0.5
+                       ).astype(jnp.bfloat16)
+    return p

@@ -1,0 +1,511 @@
+"""Composable decoder model: init / train-forward / prefill / decode for
+all 10 assigned architectures.
+
+Families:
+  dense | audio | vlm : uniform [attn + MLP] stack, lax.scan over layers
+  moe                 : uniform [attn + MoE] stack, scan over layers
+  hybrid (zamba2)     : 54 Mamba2 layers + ONE shared attn+MLP block
+                        (weight-tied) applied every `attn_every` layers —
+                        scan over groups, inner scan over the group's
+                        mamba layers
+  ssm (xlstm)         : 12-layer python loop of mLSTM/sLSTM blocks
+
+Stacks are scanned so HLO size is depth-independent (80-layer qwen1.5-110b
+compiles as one loop); each scanned body is wrapped in jax.checkpoint
+(remat) so activation memory is O(sqrt-ish), with matmul outputs saveable.
+
+Modality frontends are stubs per the assignment: internvl2 consumes
+precomputed patch embeddings through a linear connector; musicgen consumes
+the EnCodec token stream directly (single-codebook stand-in).
+"""
+from __future__ import annotations
+
+import functools
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from . import xlstm as xlstm_mod
+from .layers import (attention_block, init_attention, init_mlp, mlp_block,
+                     rms_norm)
+
+_POLICIES = {"dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+             "none": None}
+
+
+def remat_policy(cfg):
+    return _POLICIES[getattr(cfg, "remat_policy", "dots")]
+
+
+REMAT_POLICY = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+
+
+def xlstm_groups(cfg):
+    """(n_groups, period) for the periodic sLSTM placement; (0, 0) if the
+    stack is pure mLSTM.  slstm_at must be (0, p, 2p, ...)."""
+    if not cfg.slstm_at:
+        return 0, 0
+    G = len(cfg.slstm_at)
+    period = cfg.n_layers // G
+    assert tuple(cfg.slstm_at) == tuple(range(0, cfg.n_layers, period)), \
+        f"slstm_at must be periodic, got {cfg.slstm_at}"
+    return G, period
+
+
+def padded_vocab(cfg, shards: int = 16) -> int:
+    return -(-cfg.vocab // shards) * shards
+
+
+# ===================================================================== init
+
+def _init_tx_layer(key, cfg, shards):
+    ks = jax.random.split(key, 3)
+    p = {"attn": init_attention(ks[0], cfg, shards),
+         "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+         "ln2": jnp.ones((cfg.d_model,), jnp.float32)}
+    if cfg.family == "moe":
+        p["moe"] = moe_mod.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg)
+    return p
+
+
+def init_params(cfg, key, shards: int = 16):
+    kemb, klay, kextra, kout = jax.random.split(key, 4)
+    V = padded_vocab(cfg, shards)
+    d = cfg.d_model
+    params = {
+        "embed": (jax.random.normal(kemb, (V, d)) * d ** -0.5
+                  ).astype(jnp.bfloat16),
+        "unembed": (jax.random.normal(kout, (d, V)) * d ** -0.5
+                    ).astype(jnp.bfloat16),
+        "final_norm": jnp.ones((d,), jnp.float32),
+    }
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        keys = jax.random.split(klay, cfg.n_layers)
+        params["layers"] = jax.vmap(
+            lambda k: _init_tx_layer(k, cfg, shards))(keys)
+    elif cfg.family == "hybrid":
+        keys = jax.random.split(klay, cfg.n_layers)
+        params["layers"] = jax.vmap(
+            lambda k: ssm_mod.init_mamba(k, cfg))(keys)
+        ks = jax.random.split(kextra, 2)
+        params["shared_attn"] = {
+            "attn": init_attention(ks[0], cfg, shards),
+            "mlp": init_mlp(ks[1], cfg),
+            "ln1": jnp.ones((d,), jnp.float32),
+            "ln2": jnp.ones((d,), jnp.float32)}
+    elif cfg.family == "ssm":
+        # periodic structure: G groups of [sLSTM, (period-1) x mLSTM]
+        # (slstm_at must be (0, p, 2p, ...)); pure-mLSTM stack if empty.
+        G, period = xlstm_groups(cfg)
+        keys = jax.random.split(klay, cfg.n_layers)
+
+        def one_m(k):
+            km, kn = jax.random.split(k)
+            return {"cell": xlstm_mod.init_mlstm(km, cfg),
+                    "ln": jnp.ones((d,), jnp.float32)}
+
+        if G:
+            def one_s(k):
+                return {"cell": xlstm_mod.init_slstm(k, cfg),
+                        "ln": jnp.ones((d,), jnp.float32)}
+            skeys = keys[::period]
+            mkeys = jnp.stack([jnp.stack([keys[g * period + j]
+                                          for j in range(1, period)])
+                               for g in range(G)])
+            params["layers"] = {
+                "slstm": jax.vmap(one_s)(jnp.stack(list(skeys))),
+                "mlstm": jax.vmap(jax.vmap(one_m))(mkeys)}
+        else:
+            params["layers"] = {"mlstm": jax.vmap(one_m)(keys)}
+    if cfg.frontend == "vision":
+        params["frontend"] = {"proj": (jax.random.normal(kextra, (d, d))
+                                       * d ** -0.5).astype(jnp.bfloat16)}
+    return params
+
+
+# ================================================================== embed
+
+def embed_inputs(params, batch, cfg, shd):
+    """Returns x (B, S, d).  VLM: [projected patches ; token embeds]."""
+    tok = batch["tokens"]
+    x = jnp.take(params["embed"], tok, axis=0)
+    x = shd.constrain(x, "batch", "seq", None)
+    if cfg.frontend == "vision" and "patch_embeds" in batch:
+        pe = jnp.einsum("bpd,de->bpe", batch["patch_embeds"].astype(x.dtype),
+                        params["frontend"]["proj"])
+        x = jnp.concatenate([pe, x], axis=1)
+        x = shd.constrain(x, "batch", "seq", None)
+    return x
+
+
+# ============================================================ train stacks
+
+def _tx_layer_fwd(lp, h, cfg, shd):
+    h = shd.constrain(h, "batch", "seq_res", None)
+    a, _ = attention_block(lp["attn"], rms_norm(h, lp["ln1"], cfg.norm_eps),
+                           cfg, shd)
+    h = h + shd.constrain(a, "batch", "seq_res", None)
+    hn = rms_norm(h, lp["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        ff, aux = moe_mod.moe_block(lp["moe"], hn, cfg, shd)
+    else:
+        ff, aux = mlp_block(lp["mlp"], hn, cfg, shd), (0.0, 0.0)
+    h = h + shd.constrain(ff, "batch", "seq_res", None)
+    return shd.constrain(h, "batch", "seq_res", None), aux
+
+
+def backbone(params, x, cfg, shd):
+    """x (B,S,d) -> (final hidden, aux losses)."""
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        def body(carry, lp):
+            h, lb, z = carry
+            h2, (alb, az) = _tx_layer_fwd(lp, h, cfg, shd)
+            return (h2, lb + alb, z + az), ()
+        if cfg.remat:
+            body = jax.checkpoint(body, policy=remat_policy(cfg),
+                                  prevent_cse=False)
+        (x, lb, z), _ = lax.scan(body, (x, 0.0, 0.0), params["layers"])
+        aux = (lb / cfg.n_layers, z / cfg.n_layers)
+    elif cfg.family == "hybrid":
+        k = cfg.attn_every
+        ng = cfg.n_layers // k
+        grouped = jax.tree.map(
+            lambda a: a.reshape((ng, k) + a.shape[1:]), params["layers"])
+        sa = params["shared_attn"]
+
+        def group(carry, gp):
+            h = carry
+
+            def mamba_one(hh, lp):
+                o, _ = ssm_mod.mamba_block(lp, hh, cfg, shd)
+                return hh + o, ()
+            if cfg.remat:
+                mamba_one = jax.checkpoint(mamba_one, policy=remat_policy(cfg),
+                                           prevent_cse=False)
+            h, _ = lax.scan(mamba_one, h, gp)
+            a, _ = attention_block(sa["attn"],
+                                   rms_norm(h, sa["ln1"], cfg.norm_eps),
+                                   cfg, shd)
+            h = h + a
+            h = h + mlp_block(sa["mlp"],
+                              rms_norm(h, sa["ln2"], cfg.norm_eps), cfg, shd)
+            return h, ()
+        if cfg.remat:
+            group = jax.checkpoint(group, policy=remat_policy(cfg),
+                                   prevent_cse=False)
+        x, _ = lax.scan(group, x, grouped)
+        aux = (0.0, 0.0)
+    else:                                    # ssm / xlstm
+        G, period = xlstm_groups(cfg)
+
+        def m_one(h, lp):
+            hn = rms_norm(h, lp["ln"], cfg.norm_eps)
+            return h + xlstm_mod.mlstm_parallel(lp["cell"], hn, cfg, shd), ()
+        if cfg.remat:
+            m_one = jax.checkpoint(m_one, policy=remat_policy(cfg),
+                                   prevent_cse=False)
+        if G:
+            def group(h, gp):
+                hn = rms_norm(h, gp["slstm"]["ln"], cfg.norm_eps)
+                o, _ = xlstm_mod.slstm_block(gp["slstm"]["cell"], hn, cfg,
+                                             shd)
+                h = h + o
+                h, _ = lax.scan(m_one, h, gp["mlstm"])
+                return h, ()
+            if cfg.remat:
+                group = jax.checkpoint(group, policy=remat_policy(cfg),
+                                       prevent_cse=False)
+            x, _ = lax.scan(group, x, params["layers"])
+        else:
+            x, _ = lax.scan(m_one, x, params["layers"]["mlstm"])
+        aux = (0.0, 0.0)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+# ==================================================================== loss
+
+def lm_loss(params, x, labels, cfg, shd, chunk: int = 512):
+    """Chunked cross-entropy: logits materialize only for `chunk` positions
+    at a time (vocab stays TP-sharded; padded vocab masked with -1e9)."""
+    B, S, d = x.shape
+    V = params["unembed"].shape[1]
+    chunk = min(chunk, S)
+    while S % chunk:           # largest chunk <= requested that divides S
+        chunk -= 1
+    nc = S // chunk
+    pad_mask = (jnp.arange(V) >= cfg.vocab) * (-1e9)
+
+    def body(carry, ci):
+        nll, cnt = carry
+        xc = lax.dynamic_slice_in_dim(x, ci * chunk, chunk, 1)
+        lc = lax.dynamic_slice_in_dim(labels, ci * chunk, chunk, 1)
+        logits = jnp.einsum("bsd,dv->bsv", xc,
+                            params["unembed"]).astype(jnp.float32)
+        logits = logits + pad_mask
+        logits = shd.constrain(logits, "batch", "seq", "vocab")
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        oh = jax.nn.one_hot(jnp.clip(lc, 0, V - 1), V, dtype=jnp.bfloat16)
+        gold = jnp.einsum("bsv,bsv->bs", logits.astype(jnp.bfloat16),
+                          oh).astype(jnp.float32)
+        valid = (lc >= 0).astype(jnp.float32)
+        nll = nll + jnp.sum((logz - gold) * valid)
+        return (nll, cnt + jnp.sum(valid)), ()
+
+    (nll, cnt), _ = lax.scan(jax.checkpoint(body, prevent_cse=False),
+                             (0.0, 0.0), jnp.arange(nc))
+    return nll / jnp.maximum(cnt, 1.0)
+
+
+def train_loss(params, batch, cfg, shd):
+    x = embed_inputs(params, batch, cfg, shd)
+    h, (lb, z) = backbone(params, x, cfg, shd)
+    h = shd.constrain(h, "batch", "seq", None)   # regather seq for loss
+    if cfg.frontend == "vision":
+        h = h[:, -batch["labels"].shape[1]:]    # loss on text positions
+    loss = lm_loss(params, h, batch["labels"], cfg, shd)
+    return loss + 0.01 * lb + 1e-3 * z, {"ce": loss, "lb": lb, "z": z}
+
+
+# ================================================================= serving
+
+def init_cache(cfg, B: int, T: int, dtype=jnp.bfloat16):
+    """Decode cache pytree (use jax.eval_shape for dry-run specs)."""
+    KV, dh, L = cfg.n_kv_heads, cfg.dh, cfg.n_layers
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        if cfg.kv_quant:
+            return {"k": jnp.zeros((L, B, T, KV, dh), jnp.int8),
+                    "v": jnp.zeros((L, B, T, KV, dh), jnp.int8),
+                    "ks": jnp.zeros((L, B, T, KV), jnp.float32),
+                    "vs": jnp.zeros((L, B, T, KV), jnp.float32)}
+        return {"k": jnp.zeros((L, B, T, KV, dh), dtype),
+                "v": jnp.zeros((L, B, T, KV, dh), dtype)}
+    if cfg.family == "hybrid":
+        ng = cfg.n_layers // cfg.attn_every
+        return {"conv": jnp.zeros((L, B, 3, cfg.d_inner), dtype),
+                "ssd": jnp.zeros((L, B, cfg.n_ssm_heads, cfg.ssm_state,
+                                  cfg.ssm_headdim), jnp.float32),
+                "attn_k": jnp.zeros((ng, B, T, KV, dh), dtype),
+                "attn_v": jnp.zeros((ng, B, T, KV, dh), dtype)}
+    # ssm / xlstm: recurrent states, O(1) in T
+    G, period = xlstm_groups(cfg)
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+
+    def mstates(*lead):
+        return {"C": jnp.zeros(lead + (B, H, dh, dh), jnp.float32),
+                "n": jnp.zeros(lead + (B, H, dh), jnp.float32),
+                "m": jnp.full(lead + (B, H), -1e30, jnp.float32)}
+    if G:
+        z = jnp.zeros((G, B, d), jnp.float32)
+        return {"slstm": (z, z + 1e-6, z, z - 1e30),
+                "mlstm": mstates(G, period - 1)}
+    return {"mlstm": mstates(cfg.n_layers)}
+
+
+def decode_step(params, cache, batch, cfg, shd):
+    """One-token decode against a T-long cache.  batch: tokens (B,1),
+    pos (B,).  Returns (new_cache, logits (B, V))."""
+    tok, pos = batch["tokens"], batch["pos"]
+    x = jnp.take(params["embed"], tok, axis=0)       # (B,1,d)
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        quant = "ks" in cache
+
+        def body(h, packed):
+            if quant:
+                lp, ck, cv, cks, cvs = packed
+                lc = {"k": ck, "v": cv, "ks": cks, "vs": cvs}
+            else:
+                lp, ck, cv = packed
+                lc = {"k": ck, "v": cv}
+            a, nc = attention_block(lp["attn"],
+                                    rms_norm(h, lp["ln1"], cfg.norm_eps),
+                                    cfg, shd, pos=pos, cache=lc)
+            h = h + a
+            hn = rms_norm(h, lp["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                ff, _ = moe_mod.moe_block(lp["moe"], hn, cfg, shd)
+            else:
+                ff = mlp_block(lp["mlp"], hn, cfg, shd)
+            out = (tuple(nc[x_] for x_ in ("k", "v", "ks", "vs"))
+                   if quant else (nc["k"], nc["v"]))
+            return h + ff, out
+        if quant:
+            xs = (params["layers"], cache["k"], cache["v"], cache["ks"],
+                  cache["vs"])
+            x, (nk, nv, nks, nvs) = lax.scan(body, x, xs)
+            new_cache = {"k": nk, "v": nv, "ks": nks, "vs": nvs}
+        else:
+            x, (nk, nv) = lax.scan(body, x, (params["layers"], cache["k"],
+                                             cache["v"]))
+            new_cache = {"k": nk, "v": nv}
+    elif cfg.family == "hybrid":
+        k = cfg.attn_every
+        ng = cfg.n_layers // k
+        grouped = jax.tree.map(
+            lambda a: a.reshape((ng, k) + a.shape[1:]), params["layers"])
+        gconv = cache["conv"].reshape((ng, k) + cache["conv"].shape[1:])
+        gssd = cache["ssd"].reshape((ng, k) + cache["ssd"].shape[1:])
+        sa = params["shared_attn"]
+
+        def group(h, packed):
+            gp, cv, sd, ak, av = packed
+
+            def one(hh, inner):
+                lp, c1, s1 = inner
+                o, ns = ssm_mod.mamba_block(lp, hh, cfg, shd,
+                                            state={"conv": c1, "ssd": s1})
+                return hh + o, (ns["conv"], ns["ssd"])
+            h, (nc1, ns1) = lax.scan(one, h, (gp, cv, sd))
+            a, nca = attention_block(sa["attn"],
+                                     rms_norm(h, sa["ln1"], cfg.norm_eps),
+                                     cfg, shd, pos=pos,
+                                     cache={"k": ak, "v": av})
+            h = h + a
+            h = h + mlp_block(sa["mlp"],
+                              rms_norm(h, sa["ln2"], cfg.norm_eps), cfg, shd)
+            return h, (nc1, ns1, nca["k"], nca["v"])
+        x, (nconv, nssd, nak, nav) = lax.scan(
+            group, x, (grouped, gconv, gssd, cache["attn_k"],
+                       cache["attn_v"]))
+        new_cache = {"conv": nconv.reshape(cache["conv"].shape),
+                     "ssd": nssd.reshape(cache["ssd"].shape),
+                     "attn_k": nak, "attn_v": nav}
+    else:                                            # xlstm
+        G, period = xlstm_groups(cfg)
+
+        def m_one(h, packed):
+            lp, st = packed
+            hn = rms_norm(h, lp["ln"], cfg.norm_eps)
+            o, ns = xlstm_mod.mlstm_decode(lp["cell"], hn, cfg, st)
+            return h + o, ns
+        if G:
+            def group(h, packed):
+                gp, s_st, m_st = packed
+                hn = rms_norm(h, gp["slstm"]["ln"], cfg.norm_eps)
+                s2 = xlstm_mod._slstm_cell(gp["slstm"]["cell"], hn[:, 0],
+                                           s_st, cfg)
+                h_out = rms_norm(s2[2][:, None, :].astype(h.dtype),
+                                 gp["slstm"]["cell"]["norm_h"], cfg.norm_eps)
+                h = h + jnp.einsum("bsd,de->bse", h_out,
+                                   gp["slstm"]["cell"]["w_out"])
+                h, nm = lax.scan(m_one, h, (gp["mlstm"], m_st))
+                return h, (s2, nm)
+            x, (ns, nm) = lax.scan(group, x,
+                                   (params["layers"], cache["slstm"],
+                                    cache["mlstm"]))
+            new_cache = {"slstm": ns, "mlstm": nm}
+        else:
+            x, nm = lax.scan(m_one, x,
+                             (params["layers"]["mlstm"], cache["mlstm"]))
+            new_cache = {"mlstm": nm}
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    V = params["unembed"].shape[1]
+    logits = jnp.einsum("bsd,dv->bsv", h, params["unembed"])[:, 0]
+    logits = logits + (jnp.arange(V) >= cfg.vocab) * (-1e9)
+    return new_cache, logits
+
+
+def prefill(params, batch, cfg, shd, cache_len: int | None = None):
+    """Process a full prompt, filling a decode cache; returns
+    (cache, last-position logits)."""
+    tok = batch["tokens"]
+    B = tok.shape[0]
+    x = embed_inputs(params, batch, cfg, shd)
+    S = x.shape[1]
+    T = cache_len or S
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        def body(h, lp):
+            hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+            empty = {"k": jnp.zeros((B, T, cfg.n_kv_heads, cfg.dh), h.dtype),
+                     "v": jnp.zeros((B, T, cfg.n_kv_heads, cfg.dh), h.dtype)}
+            if cfg.kv_quant:
+                empty["ks"] = jnp.zeros((B, T, cfg.n_kv_heads), jnp.float32)
+                empty["vs"] = jnp.zeros((B, T, cfg.n_kv_heads), jnp.float32)
+            a, nc = attention_block(lp["attn"], hn, cfg, shd, cache=empty)
+            h = h + a
+            hn = rms_norm(h, lp["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                ff, _ = moe_mod.moe_block(lp["moe"], hn, cfg, shd)
+            else:
+                ff = mlp_block(lp["mlp"], hn, cfg, shd)
+            out = (tuple(nc[x_] for x_ in ("k", "v", "ks", "vs"))
+                   if cfg.kv_quant else (nc["k"], nc["v"]))
+            return h + ff, out
+        if cfg.remat:
+            body = jax.checkpoint(body, policy=remat_policy(cfg),
+                                  prevent_cse=False)
+        if cfg.kv_quant:
+            x, (nk, nv, nks, nvs) = lax.scan(body, x, params["layers"])
+            cache = {"k": nk, "v": nv, "ks": nks, "vs": nvs}
+        else:
+            x, (nk, nv) = lax.scan(body, x, params["layers"])
+            cache = {"k": nk, "v": nv}
+    elif cfg.family == "hybrid":
+        k = cfg.attn_every
+        ng = cfg.n_layers // k
+        grouped = jax.tree.map(
+            lambda a: a.reshape((ng, k) + a.shape[1:]), params["layers"])
+        sa = params["shared_attn"]
+
+        def group(h, gp):
+            def one(hh, lp):
+                o, ns = ssm_mod.mamba_block(lp, hh, cfg, shd)
+                return hh + o, (ns["conv"], ns["ssd"])
+            h, (ncv, nsd) = lax.scan(one, h, gp)
+            hn = rms_norm(h, sa["ln1"], cfg.norm_eps)
+            a, nca = attention_block(
+                sa["attn"], hn, cfg, shd,
+                cache={"k": jnp.zeros((B, T, cfg.n_kv_heads, cfg.dh),
+                                      h.dtype),
+                       "v": jnp.zeros((B, T, cfg.n_kv_heads, cfg.dh),
+                                      h.dtype)})
+            h = h + a
+            h = h + mlp_block(sa["mlp"],
+                              rms_norm(h, sa["ln2"], cfg.norm_eps), cfg, shd)
+            return h, (ncv, nsd, nca["k"], nca["v"])
+        if cfg.remat:
+            group = jax.checkpoint(group, policy=remat_policy(cfg),
+                                   prevent_cse=False)
+        x, (nconv, nssd, nak, nav) = lax.scan(group, x, grouped)
+        cache = {"conv": nconv.reshape((cfg.n_layers,) + nconv.shape[2:]),
+                 "ssd": nssd.reshape((cfg.n_layers,) + nssd.shape[2:]),
+                 "attn_k": nak, "attn_v": nav}
+    else:                                            # xlstm
+        G, period = xlstm_groups(cfg)
+
+        def m_one(h, lp):
+            hn = rms_norm(h, lp["ln"], cfg.norm_eps)
+            o = xlstm_mod.mlstm_parallel(lp["cell"], hn, cfg, shd)
+            st = xlstm_mod.mlstm_final_state(lp["cell"], hn, cfg)
+            return h + o, st
+        if cfg.remat:
+            m_one = jax.checkpoint(m_one, policy=remat_policy(cfg),
+                                   prevent_cse=False)
+        if G:
+            def group(h, gp):
+                hn = rms_norm(h, gp["slstm"]["ln"], cfg.norm_eps)
+                o, s_st = xlstm_mod.slstm_block(gp["slstm"]["cell"], hn,
+                                                cfg, shd)
+                h = h + o
+                h, m_st = lax.scan(m_one, h, gp["mlstm"])
+                return h, (s_st, m_st)
+            if cfg.remat:
+                group = jax.checkpoint(group, policy=remat_policy(cfg),
+                                       prevent_cse=False)
+            x, (ns, nm) = lax.scan(group, x, params["layers"])
+            cache = {"slstm": ns, "mlstm": nm}
+        else:
+            x, nm = lax.scan(m_one, x, params["layers"]["mlstm"])
+            cache = {"mlstm": nm}
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    V = params["unembed"].shape[1]
+    logits = jnp.einsum("bd,dv->bv", h[:, -1], params["unembed"])
+    logits = logits + (jnp.arange(V) >= cfg.vocab) * (-1e9)
+    return cache, logits

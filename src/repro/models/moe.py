@@ -1,0 +1,177 @@
+"""Mixture-of-Experts layer (olmoe, deepseek-moe): top-k router, shared +
+routed experts, expert parallelism over the 'model' mesh axis.
+
+Two dispatch implementations (cfg.moe_impl):
+
+  * 'gather' (default, production path) — shard_map over the mesh: each
+    model shard owns E/tp experts; activations are replicated across
+    'model' at the MoE boundary, so dispatch is a LOCAL sort + gather into
+    per-expert capacity buffers (zero dispatch-matmul FLOPs), expert GEMMs
+    are local, and the combine is a single psum over 'model'.  This is the
+    einsum-free analogue of all-to-all EP: the token payload crosses the
+    ICI exactly once (in the psum).
+
+  * 'onehot' — classic capacity one-hot einsum dispatch (Mesh-TF/GShard
+    style).  Kept as the paper-faithful-baseline-style reference and for
+    small configs/tests; its dispatch einsums burn T*E*C*d MACs, which the
+    roofline analysis exposes (see EXPERIMENTS.md §Perf).
+
+Both produce identical outputs up to capacity-drop tie-breaking; tests
+compare them on small shapes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def router_probs(x, w_router):
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        w_router.astype(jnp.float32))
+    return jax.nn.softmax(logits, axis=-1), logits
+
+
+def aux_losses(probs, top_idx, n_experts: int):
+    """Load-balance loss (Switch) + router z-loss."""
+    T, k = top_idx.shape
+    me = jnp.mean(probs, axis=0)                          # (E,)
+    ce = jnp.zeros((n_experts,), jnp.float32).at[top_idx.reshape(-1)].add(
+        1.0 / (T * k))
+    lb = n_experts * jnp.sum(me * ce)
+    z = jnp.mean(jnp.log(jnp.sum(jnp.exp(
+        jnp.clip(probs, 1e-9, 1.0)), axis=-1)) ** 2)
+    return lb, z
+
+
+def _expert_ffn(h_in, w_in, w_gate, w_out, act: str):
+    """(E, C, d) x (E, d, f) -> (E, C, d)."""
+    h = jnp.einsum("ecd,edf->ecf", h_in, w_in)
+    if act == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", h_in, w_gate)
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("ecf,efd->ecd", h, w_out)
+
+
+def moe_gather_local(x, p, cfg, *, e_start, e_local, capacity, axis_name):
+    """Local shard body (inside shard_map): x (T, d) is this data-shard's
+    tokens, replicated across 'model'; this model shard computes its
+    e_local experts and psums the combine.
+
+    Memory discipline: the only (expert, capacity, d) tensor built is the
+    local expert input buffer — the (T*k, d) gathered view never exists.
+    For each local expert slot (e, c) we compute which *sorted routed
+    token* fills it (slot-inverse indexing) and gather exactly E_local*C
+    rows."""
+    T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = capacity
+    probs, _ = router_probs(x, p["router"])               # (T, E) replicated
+    top_p, top_i = lax.top_k(probs, k)                    # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = top_i.reshape(-1)                            # (T*k,)
+    order = jnp.argsort(flat_e)                           # stable
+    se = flat_e[order]
+    st = order // k                                       # token of sorted slot
+    sp = top_p.reshape(-1)[order]
+    counts = jnp.zeros((E,), jnp.int32).at[se].add(1)
+    starts = jnp.cumsum(counts) - counts                  # exclusive prefix
+    eids = e_start + jnp.arange(e_local)
+    src = starts[eids][:, None] + jnp.arange(C)[None, :]  # (e_local, C)
+    valid = jnp.arange(C)[None, :] < jnp.minimum(counts[eids], C)[:, None]
+    src = jnp.clip(src, 0, T * k - 1)
+    tok = st[src]                                         # (e_local, C)
+    gate = sp[src] * valid                                # (e_local, C)
+    buf = x[tok] * valid[..., None].astype(x.dtype)       # (e_local, C, d)
+    y = _expert_ffn(buf, p["w_in"], p.get("w_gate"), p["w_out"], cfg.act)
+    contrib = y * gate[..., None].astype(x.dtype)
+    out = jnp.zeros((T, d), x.dtype).at[tok.reshape(-1)].add(
+        contrib.reshape(-1, d))
+    out = lax.psum(out, axis_name) if axis_name else out  # combine over EP
+    lb, z = aux_losses(probs, top_i, E)
+    return out, lb, z
+
+
+def moe_onehot(x, p, cfg, *, capacity):
+    """Reference one-hot dispatch (per data shard, experts model-sharded by
+    GSPMD from the weight sharding).  x: (T, d)."""
+    T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    probs, _ = router_probs(x, p["router"])
+    top_p, top_i = lax.top_k(probs, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    oh = jax.nn.one_hot(top_i, E, dtype=jnp.float32)      # (T, k, E)
+    # capacity positions per expert, k-slot priority order
+    pos = (jnp.cumsum(oh.reshape(T * k, E), axis=0) - 1.0).reshape(T, k, E)
+    keep = (pos < capacity) * oh
+    pos = jnp.clip(pos, 0, capacity - 1).astype(jnp.int32)
+    pos_oh = jax.nn.one_hot(pos, capacity, dtype=jnp.float32)  # (T,k,E,C)
+    disp = (keep[..., None] * pos_oh).sum(1)              # (T, E, C)
+    comb = (keep * top_p[..., None])[..., None] * pos_oh  # (T,k,E,C)
+    comb = comb.sum(1)                                    # (T, E, C)
+    h_in = jnp.einsum("tec,td->ecd", disp.astype(x.dtype), x)
+    y = _expert_ffn(h_in, p["w_in"], p.get("w_gate"), p["w_out"], cfg.act)
+    out = jnp.einsum("tec,ecd->td", comb.astype(x.dtype), y)
+    lb, z = aux_losses(probs, top_i, E)
+    return out, lb, z
+
+
+def moe_block(p, x, cfg, shd):
+    """x (B, S, d) -> (B, S, d) plus aux losses via shd context.
+
+    Shared experts (deepseek) run as a dense MLP on every token, TP-sharded
+    like a regular FFN; routed experts are EP-sharded.
+    """
+    B, S, d = x.shape
+    T = B * S
+    cap = int(cfg.capacity_factor * T * cfg.top_k / cfg.n_experts /
+              max(1, shd.dp_size))
+    cap = max(cap, cfg.top_k)
+    xt = x.reshape(T, d)
+
+    if cfg.moe_impl == "gather" and shd.mesh is not None:
+        out2, lb, z = shd.moe_shard_map(
+            functools.partial(moe_gather_local, cfg=cfg, capacity=cap),
+            xt, p)
+    elif cfg.moe_impl == "gather":
+        out2, lb, z = moe_gather_local(
+            xt, p, cfg, e_start=0, e_local=cfg.n_experts, capacity=cap,
+            axis_name=None)
+    else:
+        out2, lb, z = moe_onehot(xt, p, cfg, capacity=cap)
+    out = out2.reshape(B, S, d)
+    if cfg.n_shared_experts:
+        h = jnp.einsum("bsd,df->bsf", x, p["shared_w_in"])
+        g = jnp.einsum("bsd,df->bsf", x, p["shared_w_gate"])
+        h = jax.nn.silu(g) * h
+        h = shd.constrain(h, "batch", "seq", "ff")
+        out = out + jnp.einsum("bsf,fd->bsd", h, p["shared_w_out"])
+    return out, (lb, z)
+
+
+def init_moe(key, cfg):
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 7)
+    std = d ** -0.5
+    p = {"router": (jax.random.normal(ks[0], (d, E)) * std
+                    ).astype(jnp.float32),
+         "w_in": (jax.random.normal(ks[1], (E, d, f)) * std
+                  ).astype(jnp.bfloat16),
+         "w_gate": (jax.random.normal(ks[2], (E, d, f)) * std
+                    ).astype(jnp.bfloat16),
+         "w_out": (jax.random.normal(ks[3], (E, f, d)) * f ** -0.5
+                   ).astype(jnp.bfloat16)}
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * f
+        p["shared_w_in"] = (jax.random.normal(ks[4], (d, fs)) * std
+                            ).astype(jnp.bfloat16)
+        p["shared_w_gate"] = (jax.random.normal(ks[5], (d, fs)) * std
+                              ).astype(jnp.bfloat16)
+        p["shared_w_out"] = (jax.random.normal(ks[6], (fs, d)) * fs ** -0.5
+                             ).astype(jnp.bfloat16)
+    return p

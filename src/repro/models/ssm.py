@@ -1,0 +1,138 @@
+"""Mamba2 block (zamba2) — chunked SSD (state-space duality) algorithm.
+
+Recurrence per head h (state N x P):   H_t = a_t H_{t-1} + B_t (dt_t x_t)^T
+readout:                               y_t = C_t^T H_t + D x_t
+
+The chunked algorithm splits the sequence into chunks of `ssd_chunk`:
+  * intra-chunk: a masked quadratic (attention-like) term using in-chunk
+    decay products exp(cum_i - cum_j);
+  * inter-chunk: per-chunk boundary states carried by a lax.scan (the only
+    sequential dependency — O(S/chunk) steps).
+
+Heads shard over 'model' (zamba2: 80 heads / 16 = 5); B/C are group-shared
+(n_groups=1) and replicated.  Decode keeps (conv tail, H state) — O(1) in
+context length, which is why zamba2 runs the long_500k shape.
+
+Simplifications vs the reference CUDA kernels (documented in DESIGN.md):
+depthwise conv applied to x only (not B/C), n_groups=1.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def depthwise_conv(x, w, conv_state=None):
+    """x (B, S, D), w (K, D) causal depthwise conv.
+    Returns (y, new_state) where state is the trailing K-1 inputs."""
+    K = w.shape[0]
+    if conv_state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else None
+    return y, new_state
+
+
+def ssd_chunked(xin, la, Bm, Cm, *, chunk: int = 128, h0=None):
+    """xin (B,S,H,P) = dt*x; la (B,S,H) = log decay; Bm/Cm (B,S,N).
+    Returns (y (B,S,H,P), h_last (B,H,N,P))."""
+    B, S, H, P = xin.shape
+    N = Bm.shape[-1]
+    c = min(chunk, S)
+    nc = S // c
+    xin_ = xin.reshape(B, nc, c, H, P)
+    la_ = la.reshape(B, nc, c, H).astype(jnp.float32)
+    Bm_ = Bm.reshape(B, nc, c, N).astype(jnp.float32)
+    Cm_ = Cm.reshape(B, nc, c, N).astype(jnp.float32)
+    cum = jnp.cumsum(la_, axis=2)                       # (B,nc,c,H)
+
+    # ---- intra-chunk (quadratic within chunk)
+    att = jnp.einsum("bgin,bgjn->bgij", Cm_, Bm_)       # (B,nc,c,c)
+    # contribution of input j to output i >= j decays by prod_{t=j+1..i} a_t
+    # = exp(cum_i - cum_j);  i == j contributes undecayed (exp(0)).
+    dec = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    dec = jnp.where(mask[None, None, :, :, None], dec, -jnp.inf)
+    w = jnp.exp(dec)                                    # (B,nc,c,c,H)
+    y_intra = jnp.einsum("bgij,bgijh,bgjhp->bgihp",
+                         att, w, xin_.astype(jnp.float32))
+
+    # ---- chunk boundary states
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)     # (B,nc,c,H)
+    S_chunk = jnp.einsum("bgjn,bgjh,bgjhp->bghnp",
+                         Bm_, decay_to_end, xin_.astype(jnp.float32))
+
+    # ---- inter-chunk scan
+    chunk_decay = jnp.exp(cum[:, :, -1, :])             # (B,nc,H)
+
+    def step(h, inputs):
+        s_c, dec_c = inputs                             # (B,H,N,P), (B,H)
+        h_new = h * dec_c[:, :, None, None] + s_c
+        return h_new, h                                 # emit state BEFORE chunk
+
+    if h0 is None:
+        h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    h_last, h_prevs = lax.scan(step,
+                               h0,
+                               (jnp.moveaxis(S_chunk, 1, 0),
+                                jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)               # (B,nc,H,N,P)
+    y_inter = jnp.einsum("bgin,bghnp,bgih->bgihp",
+                         Cm_, h_prevs, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    return y.astype(xin.dtype), h_last
+
+
+def mamba_block(p, x, cfg, shd, state=None):
+    """x (B, S, d) -> (B, S, d).  state: None (train/prefill from scratch)
+    or {'conv': (B,K-1,di), 'ssd': (B,H,N,P)} for decode."""
+    B, S, d = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_headdim
+    z = jnp.einsum("bsd,de->bse", x, p["in_z"])
+    xr = jnp.einsum("bsd,de->bse", x, p["in_x"])
+    Bm = jnp.einsum("bsd,dn->bsn", x, p["in_B"])
+    Cm = jnp.einsum("bsd,dn->bsn", x, p["in_C"])
+    dt = jnp.einsum("bsd,dh->bsh", x, p["in_dt"])
+    xr = shd.constrain(xr, "batch", "seq", "dinner")
+    z = shd.constrain(z, "batch", "seq", "dinner")
+    conv_state = state["conv"] if state is not None else None
+    xc, new_conv = depthwise_conv(xr, p["conv_w"], conv_state)
+    xc = jax.nn.silu(xc)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                  # (H,)
+    la = dt * A                                                   # log decay
+    xh = xc.reshape(B, S, H, P)
+    xin = xh * dt[..., None].astype(xh.dtype)
+    h0 = state["ssd"] if state is not None else None
+    y, h_last = ssd_chunked(xin, la, Bm, Cm,
+                            chunk=min(128, S), h0=h0)
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(B, S, di)
+    from .layers import rms_norm
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    new_state = {"conv": new_conv, "ssd": h_last}
+    return out, new_state
+
+
+def init_mamba(key, cfg):
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    ks = jax.random.split(key, 7)
+    std = d ** -0.5
+    return {
+        "in_z": (jax.random.normal(ks[0], (d, di)) * std).astype(jnp.bfloat16),
+        "in_x": (jax.random.normal(ks[1], (d, di)) * std).astype(jnp.bfloat16),
+        "in_B": (jax.random.normal(ks[2], (d, N)) * std).astype(jnp.bfloat16),
+        "in_C": (jax.random.normal(ks[3], (d, N)) * std).astype(jnp.bfloat16),
+        "in_dt": (jax.random.normal(ks[4], (d, H)) * std).astype(jnp.bfloat16),
+        "conv_w": (jax.random.normal(ks[5], (4, di)) * 0.5).astype(jnp.bfloat16),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 0.01, jnp.float32))),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.bfloat16),
+        "norm": jnp.ones((di,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[6], (di, d)) * di ** -0.5
+                     ).astype(jnp.bfloat16),
+    }

@@ -1,0 +1,189 @@
+"""xLSTM blocks (xlstm-125m): mLSTM (matrix memory, parallelizable) and
+sLSTM (scalar memory, recurrent scan).
+
+mLSTM trains in its parallel form — the same online-softmax block machinery
+as flash attention, with the additive decay bias D_ij = F_i - F_j + i_j
+(F = cumulative log-sigmoid forget gates) and the mLSTM denominator
+max(|l|, exp(-m)) (layers.flash_attention(decay=..., mlstm_norm=True)).
+Decode uses the recurrent matrix-state update: O(1) state per token, which
+is what makes the long_500k shape runnable.
+
+sLSTM has no parallel form (its forget gate depends on the previous hidden
+state), so it runs as a lax.scan over time with exponential-gate
+stabilizer state m.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import flash_attention, rms_norm
+
+
+# ------------------------------------------------------------------ mLSTM
+
+def mlstm_parallel(p, x, cfg, shd):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(B, S, H, dh)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(B, S, H, dh)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(B, S, H, dh)
+    ig = jnp.einsum("bsd,dh->bsh", x, p["wi"]).astype(jnp.float32)
+    fg = jnp.einsum("bsd,dh->bsh", x, p["wf"]).astype(jnp.float32)
+    F = jnp.cumsum(jax.nn.log_sigmoid(fg), axis=1)        # (B,S,H)
+    h = flash_attention(q, k, v, causal=True, decay=(F, ig),
+                        mlstm_norm=True,
+                        softmax_scale=1.0 / math.sqrt(dh))
+    h = rms_norm(h.reshape(B, S, d), p["norm_h"], cfg.norm_eps)
+    o = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["wo_gate"]))
+    return jnp.einsum("bse,ed->bsd", h * o.astype(h.dtype), p["w_out"])
+
+
+def mlstm_decode(p, x, cfg, state):
+    """x (B,1,d); state {'C': (B,H,dh,dh), 'n': (B,H,dh), 'm': (B,H)}."""
+    B, _, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(B, H, dh)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(B, H, dh)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(B, H, dh)
+    ig = jnp.einsum("bsd,dh->bh", x, p["wi"]).astype(jnp.float32)
+    fg = jax.nn.log_sigmoid(
+        jnp.einsum("bsd,dh->bh", x, p["wf"]).astype(jnp.float32))
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(fg + m, ig)
+    a = jnp.exp(fg + m - m_new)[..., None]                # (B,H,1)
+    b = jnp.exp(ig - m_new)[..., None]
+    kf = k.astype(jnp.float32) / math.sqrt(dh)
+    C_new = C * a[..., None] + b[..., None] * (
+        kf[..., :, None] * v.astype(jnp.float32)[..., None, :])
+    n_new = n * a + b * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", qf, C_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n_new)),
+                      jnp.exp(-m_new)) + 1e-6
+    h = (num / den[..., None]).reshape(B, 1, d).astype(x.dtype)
+    h = rms_norm(h, p["norm_h"], cfg.norm_eps)
+    o = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["wo_gate"]))
+    out = jnp.einsum("bse,ed->bsd", h * o.astype(h.dtype), p["w_out"])
+    return out, {"C": C_new, "n": n_new, "m": m_new}
+
+
+def mlstm_final_state(p, x, cfg):
+    """Exact recurrent state after a parallel-form prefill of x (B,S,d):
+    C_S = sum_j exp(F_S - F_j + i_j - m*) k_j v_j^T (log-weighted sum),
+    n_S likewise, m = m*.  One einsum — used for prefill->decode handoff."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    k = jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(B, S, H, dh)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(B, S, H, dh)
+    ig = jnp.einsum("bsd,dh->bsh", x, p["wi"]).astype(jnp.float32)
+    fg = jnp.einsum("bsd,dh->bsh", x, p["wf"]).astype(jnp.float32)
+    F = jnp.cumsum(jax.nn.log_sigmoid(fg), axis=1)
+    w = F[:, -1:, :] - F + ig                             # (B,S,H)
+    m = w.max(axis=1)                                     # (B,H)
+    a = jnp.exp(w - m[:, None, :])                        # (B,S,H)
+    kf = k.astype(jnp.float32) / math.sqrt(dh)
+    C = jnp.einsum("bsh,bshd,bshe->bhde", a, kf, v.astype(jnp.float32))
+    n = jnp.einsum("bsh,bshd->bhd", a, kf)
+    return {"C": C, "n": n, "m": m}
+
+
+def init_mlstm(key, cfg):
+    d, H = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    std = d ** -0.5
+    return {"wq": (jax.random.normal(ks[0], (d, d)) * std).astype(jnp.bfloat16),
+            "wk": (jax.random.normal(ks[1], (d, d)) * std).astype(jnp.bfloat16),
+            "wv": (jax.random.normal(ks[2], (d, d)) * std).astype(jnp.bfloat16),
+            "wi": (jax.random.normal(ks[3], (d, H)) * std).astype(jnp.bfloat16),
+            "wf": (jax.random.normal(ks[4], (d, H)) * std).astype(jnp.bfloat16),
+            "wo_gate": (jax.random.normal(ks[5], (d, d)) * std
+                        ).astype(jnp.bfloat16),
+            "w_out": (jax.random.normal(ks[0], (d, d)) * std
+                      ).astype(jnp.bfloat16),
+            "norm_h": jnp.ones((d,), jnp.float32)}
+
+
+def init_mlstm_state(cfg, B):
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    return {"C": jnp.zeros((B, H, dh, dh), jnp.float32),
+            "n": jnp.zeros((B, H, dh), jnp.float32),
+            "m": jnp.full((B, H), -1e30, jnp.float32)}
+
+
+# ------------------------------------------------------------------ sLSTM
+
+def _slstm_cell(p, x_t, state, cfg):
+    """One step.  x_t (B, d); state tuple (c, n, h, m) each (B, d)."""
+    c, n, h, m = state
+    B, d = x_t.shape
+    H = cfg.n_heads
+    dh = d // H
+    hh = h.reshape(B, H, dh)
+
+    def gate(wx, r):
+        rec = jnp.einsum("bhd,hde->bhe", hh.astype(jnp.float32),
+                         r.astype(jnp.float32)).reshape(B, d)
+        return jnp.einsum("bd,de->be", x_t,
+                          wx).astype(jnp.float32) + rec
+
+    zi = jnp.tanh(gate(p["wz"], p["rz"]))
+    ii = gate(p["wi"], p["ri"])
+    ff = gate(p["wf"], p["rf"])
+    oo = jax.nn.sigmoid(gate(p["wo"], p["ro"]))
+    lf = jax.nn.log_sigmoid(ff)
+    m_new = jnp.maximum(lf + m, ii)
+    i_e = jnp.exp(ii - m_new)
+    f_e = jnp.exp(lf + m - m_new)
+    c_new = f_e * c + i_e * zi
+    n_new = jnp.maximum(f_e * n + i_e, jnp.exp(-m_new))
+    h_new = oo * c_new / n_new
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_block(p, x, cfg, shd, state=None):
+    """x (B, S, d) scan over time.  Returns (out, final_state)."""
+    B, S, d = x.shape
+    if state is None:
+        z = jnp.zeros((B, d), jnp.float32)
+        state = (z, z + 1e-6, z, z - 1e30)
+
+    def step(st, x_t):
+        st2 = _slstm_cell(p, x_t, st, cfg)
+        return st2, st2[2]                                # emit h
+
+    state, hs = lax.scan(jax.checkpoint(step, prevent_cse=False),
+                         state, jnp.moveaxis(x, 0, 1))
+    hs = jnp.moveaxis(hs, 0, 1).astype(x.dtype)           # (B,S,d)
+    hs = rms_norm(hs, p["norm_h"], cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", hs, p["w_out"])
+    return out, state
+
+
+def init_slstm(key, cfg):
+    d, H = cfg.d_model, cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 9)
+    std = d ** -0.5
+    p = {}
+    for i, g in enumerate("zifo"):
+        p[f"w{g}"] = (jax.random.normal(ks[i], (d, d)) * std
+                      ).astype(jnp.bfloat16)
+        p[f"r{g}"] = (jax.random.normal(ks[4 + i], (H, dh, dh)) * dh ** -0.5
+                      ).astype(jnp.bfloat16)
+    p["w_out"] = (jax.random.normal(ks[8], (d, d)) * std).astype(jnp.bfloat16)
+    p["norm_h"] = jnp.ones((d,), jnp.float32)
+    return p
+
+
+def init_slstm_state(cfg, B):
+    d = cfg.d_model
+    z = jnp.zeros((B, d), jnp.float32)
+    return (z, z + 1e-6, z, z - 1e30)

@@ -1,0 +1,310 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+Three terms per (arch x shape x mesh) cell, TPU v5e constants:
+
+    compute    = HLO_FLOPs_per_chip / 197e12        (bf16 peak / chip)
+    memory     = HLO_bytes_per_chip / 819e9         (HBM bw / chip)
+    collective = collective_bytes_per_chip / 50e9   (ICI bw / link)
+
+XLA's ``compiled.cost_analysis()`` visits each computation ONCE, so
+scan-over-layers while-loops are undercounted by their trip count.  This
+module re-derives the terms with a loop-aware walk over the optimized
+per-device HLO text:
+
+  * dot FLOPs  = 2 * result_elements * contraction_size, from the dot's
+    operand shapes + lhs_contracting_dims;
+  * HBM bytes  ~ 2 * result bytes of every materializing op (fusion, dot,
+    copy, convert, collective...) — a write+read proxy for traffic;
+  * collective bytes = result bytes of all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute ops;
+  * while bodies multiply by the trip count recovered from the loop
+    condition's comparison constant (scan lowers to counted whiles);
+    nesting multiplies.
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) gives the "useful
+compute" yardstick; the ratio MODEL_FLOPS / HLO_FLOPs exposes remat
+recompute, attention-flash double-counting and dispatch overhead.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+from pathlib import Path
+
+PEAK_FLOPS = 197e12        # bf16 / chip, TPU v5e
+HBM_BW = 819e9             # B/s / chip
+ICI_BW = 50e9              # B/s / link
+
+DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2,
+               "u16": 2, "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8,
+               "u64": 8, "c64": 8, "c128": 16}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_SKIP_OPS = ("parameter(", "constant(", "get-tuple-element(", "tuple(",
+             "bitcast(", "iota(")
+
+
+def _first_shape(text: str):
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    dt, dims = m.group(1), m.group(2)
+    if dt not in DTYPE_BYTES:
+        return None
+    shape = [int(d) for d in dims.split(",") if d]
+    return dt, shape
+
+
+def _all_shapes_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+class HLOCost:
+    """Loop-aware flops/bytes/collective census of one HLO module."""
+
+    def __init__(self, hlo: str):
+        self.comps: dict[str, dict] = {}
+        self._parse(hlo)
+        self.entry = self._find_entry(hlo)
+
+    def _parse(self, hlo: str) -> None:
+        cur = None
+        symtab: dict[str, tuple] = {}
+        for raw in hlo.splitlines():
+            if raw and not raw[0].isspace() and "{" in raw and "(" in raw:
+                head = raw.split("(")[0].strip()
+                name = head.replace("ENTRY", "").strip().lstrip("%")
+                cur = name
+                self.comps[cur] = {"flops": 0, "bytes": 0, "coll": 0,
+                                   "coll_ops": {}, "whiles": [],
+                                   "calls": [], "max_const": 0,
+                                   "fusion_calls": [],
+                                   "root_dus_update": None,
+                                   "consts": {}, "root_ops": []}
+                # computation params carry shapes in the header
+                symtab = {}
+                for pm in re.finditer(r"%?([\w\.\-]+):\s*(\w+\[[\d,]*\])",
+                                      raw):
+                    sh = _first_shape(pm.group(2))
+                    if sh:
+                        symtab[pm.group(1)] = sh
+                continue
+            if cur is None:
+                continue
+            line = raw.strip()
+            if not line or line.startswith("//") or line.startswith("ROOT %tuple"):
+                pass
+            c = self.comps[cur]
+            mcn = re.match(r"%?([\w\.\-]+) = s32\[\] constant\((\d+)\)",
+                           line)
+            if mcn:
+                c["consts"][mcn.group(1)] = int(mcn.group(2))
+            mc = re.findall(r"s32\[\] constant\((\d+)\)", line)
+            for v in mc:
+                c["max_const"] = max(c["max_const"], int(v))
+            if line.startswith("ROOT"):
+                c["root_ops"] = re.findall(r"%([\w\.\-]+)[,)]", line)
+            mw = re.search(r"while\(.*?condition=%?([\w\.\-]+), "
+                           r"body=%?([\w\.\-]+)", line)
+            if mw:
+                c["whiles"].append((mw.group(1), mw.group(2)))
+                continue
+            mcall = re.search(r"\b(?:call|async-start)\(.*?to_apply=%?"
+                              r"([\w\.\-]+)", line)
+            if mcall:
+                c["calls"].append(mcall.group(1))
+            mcond = re.findall(r"(?:true_computation|false_computation|"
+                               r"branch_computations=\{)%?([\w\.\-]+)", line)
+            for t in mcond:
+                c["calls"].append(t.rstrip("},"))
+            if "=" not in line:
+                continue
+            lhs, rhs = line.split("=", 1)
+            rhs = rhs.strip()
+            opname = lhs.strip().lstrip("%")
+            # result shape opens the rhs: "f32[512,50304]{1,0} dot(..."
+            shape_txt = rhs.split("(")[0]
+            res = _first_shape(shape_txt)
+            if res is not None:
+                symtab[opname] = res
+            if any(f" {s}" in f" {rhs}" for s in _SKIP_OPS):
+                continue  # shapes already recorded in symtab above
+            res_bytes = _all_shapes_bytes(shape_txt)
+            for op in COLLECTIVES:
+                if re.search(rf"\b{op}(-start)?\(", rhs):
+                    c["coll"] += res_bytes
+                    c["coll_ops"][op] = c["coll_ops"].get(op, 0) + res_bytes
+                    break
+            if " dot(" in f" {rhs}":
+                c["flops"] += self._dot_flops(res, rhs, symtab)
+            # in-place buffer updates: count the update, not the buffer
+            mdus = re.search(r"dynamic-update-slice\(%?[\w\.\-]+, "
+                             r"%?([\w\.\-]+)", rhs)
+            if mdus is not None:
+                upd = symtab.get(mdus.group(1))
+                if upd is not None:
+                    n = 1
+                    for d in upd[1]:
+                        n *= d
+                    res_bytes = n * DTYPE_BYTES[upd[0]]
+                if line.startswith("ROOT"):
+                    c["root_dus_update"] = res_bytes
+            mfus = re.search(r"fusion\(.*?calls=%?([\w\.\-]+)", rhs)
+            if mfus is not None:
+                c["fusion_calls"].append((mfus.group(1), res_bytes))
+            c["bytes"] += 2 * res_bytes  # write + read-back proxy
+
+    @staticmethod
+    def _dot_flops(res, rhs: str, symtab: dict) -> int:
+        if res is None:
+            return 0
+        out_elems = 1
+        for d in res[1]:
+            out_elems *= d
+        # contraction size from the lhs OPERAND's recorded shape
+        mops = re.search(r"dot\(%?([\w\.\-]+),", rhs)
+        mdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+        if not mops or not mdims or mops.group(1) not in symtab:
+            return 2 * out_elems  # unresolvable operand: K=1 fallback
+        lhs_shape = symtab[mops.group(1)][1]
+        k = 1
+        for i in [int(x) for x in mdims.group(1).split(",") if x]:
+            if i < len(lhs_shape):
+                k *= lhs_shape[i]
+        return 2 * out_elems * k
+
+    def _trip_count(self, cond: str) -> int:
+        """Constant operand of the condition's ROOT comparison; fallback
+        to the max constant in the condition computation."""
+        c = self.comps.get(cond)
+        if c is None:
+            return 1
+        for op in c.get("root_ops", []):
+            if op in c["consts"]:
+                return c["consts"][op]
+        return c.get("max_const", 1)
+
+    def _find_entry(self, hlo: str) -> str:
+        m = re.search(r"^ENTRY %?([\w\.\-]+)", hlo, re.M)
+        return m.group(1) if m else next(iter(self.comps))
+
+    def totals(self) -> dict:
+        memo: dict[str, dict] = {}
+
+        def walk(name: str) -> dict:
+            if name in memo:
+                return memo[name]
+            c = self.comps.get(name)
+            if c is None:
+                return {"flops": 0, "bytes": 0, "coll": 0, "coll_ops": {}}
+            memo[name] = {"flops": 0, "bytes": 0, "coll": 0, "coll_ops": {}}
+            tot = {"flops": c["flops"], "bytes": c["bytes"],
+                   "coll": c["coll"], "coll_ops": dict(c["coll_ops"])}
+            # fusions whose root is an in-place DUS: swap buffer-size bytes
+            # for update-size bytes
+            for called, res_b in c["fusion_calls"]:
+                upd = self.comps.get(called, {}).get("root_dus_update")
+                if upd is not None:
+                    tot["bytes"] += 2 * (upd - res_b)
+            for callee in c["calls"]:
+                sub = walk(callee)
+                tot["flops"] += sub["flops"]
+                tot["bytes"] += sub["bytes"]
+                tot["coll"] += sub["coll"]
+                for k, v in sub["coll_ops"].items():
+                    tot["coll_ops"][k] = tot["coll_ops"].get(k, 0) + v
+            for cond, body in c["whiles"]:
+                trip = max(self._trip_count(cond), 1)
+                for sub_name in (cond, body):
+                    sub = walk(sub_name)
+                    tot["flops"] += trip * sub["flops"]
+                    tot["bytes"] += trip * sub["bytes"]
+                    tot["coll"] += trip * sub["coll"]
+                    for k, v in sub["coll_ops"].items():
+                        tot["coll_ops"][k] = (tot["coll_ops"].get(k, 0)
+                                              + trip * v)
+            memo[name] = tot
+            return tot
+
+        return walk(self.entry)
+
+
+def analyze_hlo(hlo: str) -> dict:
+    t = HLOCost(hlo).totals()
+    return {"flops_per_device": t["flops"],
+            "hbm_bytes_per_device": t["bytes"],
+            "collective_bytes_per_device": t["coll"],
+            "collective_bytes_by_op": t["coll_ops"]}
+
+
+def roofline_terms(cell: dict) -> dict:
+    """cell: one dry-run JSON record (launch/dryrun.py)."""
+    la = cell.get("loop_aware", {})
+    flops = la.get("flops_per_device") or cell["cost"]["flops_per_device"]
+    bts = la.get("hbm_bytes_per_device") or cell["cost"]["bytes_per_device"]
+    coll = la.get("collective_bytes_per_device",
+                  cell["collectives"]["total_bytes"])
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bts / HBM_BW
+    coll_s = coll / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dom = max(terms, key=terms.get)
+    # MODEL_FLOPS: 6*N*D for train (fwd+bwd), 2*N*D for inference
+    n = (cell["params_active"] if cell["params_active"] else
+         cell["params_total"])
+    D = cell["tokens_per_step"]
+    mf = (6 if cell["kind"] == "train" else 2) * n * D
+    mf_per_dev = mf / cell["n_chips"]
+    return dict(terms, dominant=dom.replace("_s", ""),
+                model_flops_per_device=mf_per_dev,
+                useful_ratio=(mf_per_dev / flops) if flops else 0.0,
+                roofline_fraction=(mf_per_dev / PEAK_FLOPS)
+                / max(compute_s, memory_s, coll_s)
+                if max(compute_s, memory_s, coll_s) > 0 else 0.0)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=str(Path(__file__).resolve().parents[2]
+                                         / "experiments" / "dryrun"))
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--variant", default="base")
+    args = ap.parse_args()
+    rows = []
+    for f in sorted(Path(args.dir).glob("*.json")):
+        cell = json.loads(f.read_text())
+        if cell["mesh"] != args.mesh or cell.get("variant",
+                                                 "base") != args.variant:
+            continue
+        t = roofline_terms(cell)
+        rows.append((cell, t))
+    hdr = (f"{'arch':22s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s}"
+           f" {'coll_s':>10s} {'dom':>7s} {'useful':>7s} {'roofline':>9s}"
+           f" {'peakGB':>7s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for cell, t in rows:
+        print(f"{cell['arch']:22s} {cell['shape']:12s} "
+              f"{t['compute_s']:10.4g} {t['memory_s']:10.4g} "
+              f"{t['collective_s']:10.4g} {t['dominant']:>7s} "
+              f"{t['useful_ratio']:7.3f} {t['roofline_fraction']:9.3f} "
+              f"{cell['memory']['peak_per_device_gb']:7.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,256 @@
+"""Logical-axis sharding rules: DP / FSDP / TP / EP / SP mapping onto the
+production mesh (launch/mesh.py).
+
+Policy (DESIGN.md §6):
+  * batch       -> ('pod','data')  (DP; dropped if batch doesn't divide)
+  * heads/ff/
+    dinner/...  -> 'model'          (TP; dropped when the dim doesn't
+                                     divide — e.g. xlstm's 4 heads stay
+                                     replicated and only the vocab is TP)
+  * experts     -> 'model'          (EP via shard_map, models/moe.py)
+  * cache_seq   -> 'model'          (decode KV caches shard on sequence so
+                                     GQA archs with few KV heads still
+                                     distribute; GSPMD turns the cache
+                                     update into a masked local write and
+                                     the softmax reductions into psums)
+  * vocab       -> 'model'          (embed d-dim + unembed vocab-dim; vocab
+                                     padded up to a multiple of the axis)
+  * FSDP (qwen1.5-110b): parameter d_model dim additionally sharded over
+    'data' (ZeRO-3); XLA all-gathers per layer inside the scan.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .models.layers import padded_heads
+
+
+class Sharding:
+    """Resolves logical axis names to mesh axes for one (cfg, batch)."""
+
+    def __init__(self, mesh: Mesh | None, cfg, global_batch: int | None = None):
+        self.mesh = mesh
+        self.cfg = cfg
+        if mesh is None:
+            self.dp_axes: tuple = ()
+            self.tp = 1
+            self.dp_size = 1
+            self.rules: dict = {}
+            return
+        names = mesh.axis_names
+        self.dp_axes = tuple(a for a in ("pod", "data") if a in names)
+        self.tp = mesh.shape["model"]
+        self.dp_size = int(np.prod([mesh.shape[a] for a in self.dp_axes]))
+        batch_ok = (global_batch is None
+                    or global_batch % max(1, self.dp_size) == 0)
+        tp = self.tp
+
+        def tp_if(n):  # shard over model iff divisible
+            return "model" if n and n % tp == 0 else None
+
+        cfg_hp = padded_heads(cfg, tp)
+        # xlstm: no weight dim divides the model axis, so 'model' would sit
+        # idle — fold it into the batch axes (pure DP over all chips).
+        batch_axes: tuple | None = self.dp_axes if batch_ok else None
+        self.batch_uses_model = False
+        if cfg.family == "ssm" and global_batch is not None:
+            for cand in (self.dp_axes + ("model",), self.dp_axes):
+                n = int(np.prod([mesh.shape[a] for a in cand]))
+                if cand and global_batch % n == 0:
+                    batch_axes = cand
+                    self.batch_uses_model = "model" in cand
+                    break
+        self.rules = {
+            "batch": batch_axes if batch_axes else None,
+            "seq": None,
+            "cache_seq": "model",
+            "heads": tp_if(cfg_hp),
+            "kv_heads": tp_if(cfg.n_kv_heads),
+            "heads_flat": tp_if(cfg_hp * cfg.dh) if tp_if(cfg_hp) else None,
+            "kv_flat": tp_if(cfg.n_kv_heads * cfg.dh)
+            if tp_if(cfg.n_kv_heads) else None,
+            "ff": tp_if(cfg.d_ff),
+            "shared_ff": tp_if(cfg.n_shared_experts * cfg.moe_d_ff),
+            "vocab": None if self.batch_uses_model else "model",
+            "dmodel_tp": None if self.batch_uses_model
+            else tp_if(cfg.d_model),
+            "dinner": tp_if(cfg.d_inner) if cfg.ssm_state else None,
+            "ssm_heads": tp_if(cfg.n_ssm_heads) if cfg.ssm_state else None,
+            "experts": tp_if(cfg.n_experts),
+            "fsdp": "data" if cfg.fsdp else None,
+            # Megatron-style sequence parallelism: FSDP archs keep the
+            # residual stream sequence-sharded over 'model' between layers
+            # (norms/residual adds run sharded; GSPMD gathers at qkv/mlp
+            # entry and reduce-scatters after the row-parallel matmuls) —
+            # scan carries shrink 16x, enabling small microbatch counts
+            "seq_res": "model" if cfg.fsdp else None,
+        }
+
+    @property
+    def padded_vocab(self) -> int:
+        v = self.cfg.vocab
+        tp = self.tp if self.mesh is not None else 16
+        return -(-v // tp) * tp
+
+    def spec(self, *names) -> P:
+        return P(*[self.rules.get(n, None) if isinstance(n, str) else n
+                   for n in names])
+
+    def constrain(self, x, *names):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(*names)))
+
+    # ---------------- parameter specs ----------------
+    def _leaf_spec(self, path: str, leaf) -> P:
+        r = self.rules
+        fsdp = r["fsdp"]
+        parts = path.split("/")
+        name = parts[-1]
+        stacked = parts[0] in ("layers", "groups")
+        pre = (None,) if stacked else ()
+        nd = getattr(leaf, "ndim", 0) - len(pre)
+
+        def sp(*axes):
+            return P(*pre, *axes)
+
+        if name == "embed":
+            return P(fsdp, r["dmodel_tp"])
+        if name == "unembed":
+            return P(fsdp, r["vocab"])
+        if self.cfg.family == "ssm":       # xlstm: DP + vocab TP only
+            return sp(*([None] * nd))
+        if nd == 3 and name in ("w_in", "w_gate", "w_out"):
+            # routed expert stacks: EP over model, FSDP over data on the
+            # contracted dim (all-gathered inside the shard_map body)
+            return sp(r["experts"], fsdp, None)
+        col = {"wq": r["heads_flat"], "wk": r["kv_flat"], "wv": r["kv_flat"],
+               "w_in": r["ff"], "w_gate": r["ff"],
+               "shared_w_in": r["shared_ff"], "shared_w_gate": r["shared_ff"],
+               "in_z": r["dinner"], "in_x": r["dinner"],
+               "in_dt": r["ssm_heads"]}
+        if name in col:
+            return sp(fsdp, col[name])
+        row = {"wo": r["heads_flat"], "w_out": r["ff"],
+               "shared_w_out": r["shared_ff"], "out_proj": r["dinner"]}
+        if name in row:
+            return sp(row[name], fsdp)
+        if name == "bq":
+            return sp(r["heads_flat"])
+        if name == "conv_w":
+            return sp(None, r["dinner"])
+        if name in ("A_log", "D", "dt_bias"):
+            return sp(r["ssm_heads"])
+        if name == "norm" and self.cfg.ssm_state:
+            return sp(r["dinner"])
+        return sp(*([None] * nd))          # norms, router, biases, stubs
+
+    def param_specs(self, params):
+        def walk(tree, path=""):
+            if isinstance(tree, dict):
+                return {k: walk(v, f"{path}/{k}" if path else k)
+                        for k, v in tree.items()}
+            if isinstance(tree, (list, tuple)):
+                t = [walk(v, f"{path}/{i}") for i, v in enumerate(tree)]
+                return type(tree)(t)
+            return self._leaf_spec(path, tree)
+        return walk(params)
+
+    def batch_specs(self, batch_tree):
+        """Inputs: dim0 = global batch over DP axes."""
+        return jax.tree.map(
+            lambda x: self.spec("batch", *([None] * (x.ndim - 1))),
+            batch_tree)
+
+    def cache_specs(self, cache_tree):
+        """Decode caches: KV caches shard (layer, batch, seq->model, ...);
+        recurrent states shard batch only."""
+        r = self.rules
+
+        cfg = self.cfg
+
+        def leaf(path, x):
+            name = path.split("/")[-1]
+            if name in ("k", "v", "attn_k", "attn_v"):
+                return P(None, r.get("batch"), "model", None, None)
+            if name in ("ks", "vs"):
+                return P(None, r.get("batch"), "model", None)
+            if name == "conv":
+                return P(None, r.get("batch"), None, r.get("dinner"))
+            if name == "ssd":
+                return P(None, r.get("batch"), r.get("ssm_heads"),
+                         None, None)
+            nd = getattr(x, "ndim", 0)
+            if nd == 0:
+                return P()
+            # xlstm stacked recurrent states: leading stack dims precede B
+            if "mlstm" in path:
+                lead = 2 if cfg.slstm_at else 1
+                return P(*([None] * lead), r.get("batch"),
+                         *([None] * (nd - lead - 1)))
+            if "slstm" in path:
+                return P(None, r.get("batch"), *([None] * (nd - 2)))
+            return P(r.get("batch"), *([None] * (nd - 1)))
+
+        def walk(tree, path=""):
+            if isinstance(tree, dict):
+                return {k: walk(v, f"{path}/{k}" if path else k)
+                        for k, v in tree.items()}
+            if isinstance(tree, (list, tuple)):
+                t = [walk(v, f"{path}/{i}") for i, v in enumerate(tree)]
+                return type(tree)(t)
+            return leaf(path, tree)
+        return walk(cache_tree)
+
+    def state_specs(self, state_tree):
+        """Train state: params/master/mu/nu share the param specs."""
+        pspec = self.param_specs(state_tree["params"])
+        return {"params": pspec,
+                "opt": {"mu": pspec, "nu": pspec, "master": pspec,
+                        "step": P()}}
+
+    # ---------------- MoE shard_map ----------------
+    def moe_shard_map(self, local_fn, xt, p):
+        """Run the gather-EP MoE body per (dp shard, model shard); the
+        token payload crosses the ICI once, in the combine psum
+        (models/moe.py)."""
+        E = self.cfg.n_experts
+        e_local = E // self.tp
+        dp = self.rules["batch"]
+        routed = {k: p[k] for k in ("router", "w_in", "w_gate", "w_out")
+                  if k in p}
+        fsdp = self.rules["fsdp"]
+        pspec = {"router": P(None, None),
+                 "w_in": P(self.rules["experts"], fsdp, None),
+                 "w_gate": P(self.rules["experts"], fsdp, None),
+                 "w_out": P(self.rules["experts"], fsdp, None)}
+        pspec = {k: pspec[k] for k in routed}
+
+        def body(x_l, p_l):
+            if fsdp:   # ZeRO-3: re-assemble expert weights for the GEMMs
+                for k in ("w_in", "w_gate", "w_out"):
+                    if k in p_l:
+                        p_l[k] = jax.lax.all_gather(p_l[k], fsdp, axis=1,
+                                                    tiled=True)
+            m_idx = jax.lax.axis_index("model")
+            out, lb, z = local_fn(x_l, p_l, e_start=m_idx * e_local,
+                                  e_local=e_local, axis_name="model")
+            if self.dp_axes:
+                lb = jax.lax.pmean(lb, self.dp_axes)
+                z = jax.lax.pmean(z, self.dp_axes)
+            return out, lb, z
+
+        fn = jax.shard_map(body, mesh=self.mesh,
+                           in_specs=(P(dp, None), pspec),
+                           out_specs=(P(dp, None), P(), P()),
+                           check_vma=False)
+        return fn(xt, routed)
+
+
+def make_sharding(mesh, cfg, global_batch=None) -> Sharding:
+    return Sharding(mesh, cfg, global_batch)

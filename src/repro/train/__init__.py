@@ -1,0 +1,7 @@
+from .adamw import AdamWConfig, apply_adamw, init_opt_state, schedule
+from .step import TrainState, make_train_step, init_train_state
+from .data import SyntheticLM, shard_batch
+
+__all__ = ["AdamWConfig", "apply_adamw", "init_opt_state", "schedule",
+           "TrainState", "make_train_step", "init_train_state",
+           "SyntheticLM", "shard_batch"]

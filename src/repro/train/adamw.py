@@ -1,0 +1,89 @@
+"""AdamW from scratch (no optax): bf16 compute params + fp32 master copy,
+fp32 moments, decoupled weight decay, global-norm clipping, cosine LR with
+linear warmup.  All state is a pytree sharded exactly like the params, so
+FSDP shards optimizer state too (ZeRO)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    # moment storage dtype: 'f32' or 'bf16' (8-bit-Adam-style compression
+    # for the 100B-class archs; math still runs in fp32)
+    moment_dtype: str = "f32"
+
+
+def schedule(opt: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(1, opt.warmup_steps))
+    prog = jnp.clip((step - opt.warmup_steps)
+                    / max(1, opt.total_steps - opt.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = opt.min_lr_frac + (1 - opt.min_lr_frac) * cos
+    return opt.lr * warm * frac
+
+
+def init_opt_state(params, moment_dtype: str = "f32"):
+    mdt = jnp.bfloat16 if moment_dtype == "bf16" else jnp.float32
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params)
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return {"mu": zeros,
+            "nu": jax.tree.map(jnp.copy, zeros),
+            "master": master,
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def _decay_mask(path_leaf) -> bool:
+    """No weight decay on norms / biases / 1-D params."""
+    return path_leaf.ndim >= 2
+
+
+def apply_adamw(opt: AdamWConfig, params, opt_state, grads):
+    step = opt_state["step"]
+    lr = schedule(opt, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, opt.clip_norm / jnp.maximum(gnorm, 1e-9))
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1 - opt.b1 ** t
+    bc2 = 1 - opt.b2 ** t
+
+    def upd(g, mu, nu, m):
+        g = g.astype(jnp.float32) * scale
+        mdt = mu.dtype
+        mu2 = opt.b1 * mu.astype(jnp.float32) + (1 - opt.b1) * g
+        nu2 = opt.b2 * nu.astype(jnp.float32) + (1 - opt.b2) * g * g
+        update = (mu2 / bc1) / (jnp.sqrt(nu2 / bc2) + opt.eps)
+        wd = opt.weight_decay if m.ndim >= 2 else 0.0
+        m2 = m - lr * (update + wd * m)
+        return mu2.astype(mdt), nu2.astype(mdt), m2
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_mu = jax.tree.leaves(opt_state["mu"])
+    flat_nu = jax.tree.leaves(opt_state["nu"])
+    flat_m = jax.tree.leaves(opt_state["master"])
+    out = [upd(g, mu, nu, m)
+           for g, mu, nu, m in zip(flat_g, flat_mu, flat_nu, flat_m)]
+    mu2 = jax.tree.unflatten(treedef, [o[0] for o in out])
+    nu2 = jax.tree.unflatten(treedef, [o[1] for o in out])
+    m2 = jax.tree.unflatten(treedef, [o[2] for o in out])
+    new_params = jax.tree.map(lambda m, p: m.astype(p.dtype), m2, params)
+    return new_params, {"mu": mu2, "nu": nu2, "master": m2,
+                        "step": step + 1}, {"lr": lr, "gnorm": gnorm}

@@ -1,0 +1,16 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here — smoke tests must see 1 device (the 512-device
+# override belongs exclusively to launch/dryrun.py).
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def small_params():
+    from repro.core.chunker import ChunkParams
+    return ChunkParams(q=8)   # 256 B chunks: many leaves at test sizes

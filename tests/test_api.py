@@ -1,0 +1,155 @@
+"""ForkBase API semantics (Table 1, M1-M17) + fork/merge behaviour."""
+import numpy as np
+import pytest
+
+from repro.core import (ChunkParams, Cluster, FBlob, FInt, FList, FMap,
+                        FSet, FString, ForkBase, GuardFailed, MergeConflict,
+                        aggregate_resolver, choose_one)
+
+P8 = ChunkParams(q=8)
+
+
+@pytest.fixture
+def db():
+    return ForkBase(params=P8)
+
+
+def test_basic_kv_compliance(db):
+    db.put("k", FString(b"v1"))
+    assert db.get("k").string().value == b"v1"
+    db.put("k", FString(b"v2"))
+    assert db.get("k").string().value == b"v2"
+    assert db.list_keys() == [b"k"]
+
+
+def test_fig4_flow(db):
+    db.put("my key", FBlob(b"my value" * 50))
+    db.fork("my key", "master", "new branch")
+    v = db.get("my key", "new branch")
+    b = v.blob()
+    b.remove(0, 10)
+    b.append(b"some more")
+    db.put("my key", b, "new branch")
+    assert db.get("my key", "new branch").blob().read() == \
+        (b"my value" * 50)[10:] + b"some more"
+    assert db.get("my key", "master").blob().read() == b"my value" * 50
+
+
+def test_track_and_lca(db):
+    uids = [db.put("k", FInt(i)) for i in range(5)]
+    hist = db.track("k", "master")
+    assert [o.uid for o in hist] == uids[::-1]
+    hist2 = db.track("k", "master", (1, 3))
+    assert [o.uid for o in hist2] == uids[::-1][1:3]
+    db.fork("k", uids[2], "side")
+    u_side = db.put("k", FInt(99), "side")
+    assert db.lca("k", uids[4], u_side) == uids[2]
+
+
+def test_foc_untagged_branches(db):
+    base = db.put("s", FMap({b"x": b"0"}))
+    m1 = db.get("s", uid=base).map()
+    m1.set(b"x", b"1")
+    u1 = db.put("s", m1, base_uid=base)
+    m2 = db.get("s", uid=base).map()
+    m2.set(b"x", b"2")
+    u2 = db.put("s", m2, base_uid=base)
+    heads = db.list_untagged_branches("s")
+    assert u1 in heads and u2 in heads and base not in heads
+    with pytest.raises(MergeConflict):
+        db.merge("s", u1, u2)
+    merged = db.merge("s", u1, u2, resolver=choose_one(1))
+    assert db.get("s", uid=merged).map().get(b"x") == b"2"
+    assert set(db.list_untagged_branches("s")) >= {merged}
+
+
+def test_merge_branches_m5(db):
+    db.put("k", FMap({b"a": b"1", b"b": b"2"}))
+    db.fork("k", "master", "dev")
+    md = db.get("k", "dev").map()
+    md.set(b"a", b"10")
+    db.put("k", md, "dev")
+    mm = db.get("k", "master").map()
+    mm.set(b"b", b"20")
+    db.put("k", mm, "master")
+    db.merge("k", "master", "dev")
+    final = db.get("k", "master").map()
+    assert final.get(b"a") == b"10" and final.get(b"b") == b"20"
+
+
+def test_guarded_put(db):
+    db.put("g", FString(b"v1"))
+    h = db.get("g").uid
+    db.put("g", FString(b"v2"), guard_uid=h)
+    with pytest.raises(GuardFailed):
+        db.put("g", FString(b"v3"), guard_uid=h)
+
+
+def test_branch_ops(db):
+    db.put("k", FString(b"x"))
+    db.fork("k", "master", "b1")
+    db.rename("k", "b1", "b2")
+    assert "b2" in db.list_tagged_branches("k")
+    db.remove("k", "b2")
+    assert "b2" not in db.list_tagged_branches("k")
+
+
+def test_primitive_merges(db):
+    base = db.put("n", FInt(10))
+    c1 = db.get("n", uid=base).integer()
+    c1.add(5)
+    u1 = db.put("n", c1, base_uid=base)
+    c2 = db.get("n", uid=base).integer()
+    c2.add(7)
+    u2 = db.put("n", c2, base_uid=base)
+    m = db.merge("n", u1, u2, resolver=aggregate_resolver)
+    assert db.get("n", uid=m).integer().value == 22
+
+
+def test_list_and_set_types(db):
+    l = FList([b"a", b"b", b"c"])
+    db.put("l", l)
+    ll = db.get("l").list()
+    ll.insert(1, b"x")
+    ll.delete(3)
+    db.put("l", ll)
+    assert list(db.get("l").list()) == [b"a", b"x", b"b"]
+    s = FSet([b"p", b"q"])
+    db.put("st", s)
+    ss = db.get("st").set()
+    ss.add(b"r")
+    ss.remove(b"p")
+    db.put("st", ss)
+    assert set(db.get("st").set()) == {b"q", b"r"}
+
+
+def test_verify_lineage(db):
+    u1 = db.put("k", FString(b"a"))
+    u2 = db.put("k", FString(b"b"))
+    u3 = db.put("k", FString(b"c"))
+    assert db.verify_lineage(u3, u1)
+    assert not db.verify_lineage(u1, u3)
+
+
+def test_cluster_balance(rng):
+    counts = {}
+    for mode in ("1LP", "2LP"):
+        cl = Cluster(8, mode, P8)
+        r = np.random.default_rng(1)
+        for i in range(40):
+            cl.put(f"hot{i % 2}", FBlob(r.bytes(16000)), branch=f"b{i}")
+        dist = cl.storage_distribution()
+        counts[mode] = (max(dist) + 1) / (min(dist) + 1)
+    assert counts["2LP"] < counts["1LP"]
+
+
+def test_cluster_api_roundtrip():
+    cl = Cluster(4, "2LP", P8)
+    cl.put("k", FBlob(b"hello world" * 100))
+    assert cl.get("k").blob().read() == b"hello world" * 100
+    cl.fork("k", "master", "dev")
+    b = cl.get("k", "dev").blob()
+    b.append(b"!")
+    cl.put("k", b, "dev")
+    assert cl.get("k", "dev").blob().read().endswith(b"!")
+    assert len(cl.track("k", "dev")) == 2

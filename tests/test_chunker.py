@@ -1,0 +1,73 @@
+"""Rolling hash + content-defined chunking invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rolling
+from repro.core.chunker import (ChunkParams, boundary_bitmap, cut_bytes,
+                                cut_elements, index_cuts)
+
+P8 = ChunkParams(q=8)
+
+
+def test_vectorized_matches_serial(rng):
+    data = rng.integers(0, 256, 3000, dtype=np.uint8)
+    for w in (4, 16, 48):
+        a = rolling.rolling_hash(data, w)
+        b = rolling.rolling_hash_serial(data.tobytes(), w)
+        np.testing.assert_array_equal(a[w - 1:], b[w - 1:])
+
+
+def test_expected_chunk_size(rng):
+    data = rng.integers(0, 256, 500_000, dtype=np.uint8)
+    cuts = cut_bytes(data, P8)
+    mean = len(data) / len(cuts)
+    assert 150 < mean < 420, mean     # E[chunk] = 2^8 = 256
+
+
+def test_boundaries_are_content_local(rng):
+    """Edit at position p only moves boundaries in [p, p+window+max)."""
+    data = rng.integers(0, 256, 100_000, dtype=np.uint8)
+    b1 = boundary_bitmap(data, P8)
+    data2 = data.copy()
+    data2[50_000] ^= 0xFF
+    b2 = boundary_bitmap(data2, P8)
+    np.testing.assert_array_equal(b1[:50_000], b2[:50_000])
+    np.testing.assert_array_equal(b1[50_000 + P8.window:],
+                                  b2[50_000 + P8.window:])
+
+
+@given(st.binary(min_size=0, max_size=5000), st.integers(0, 100))
+@settings(max_examples=30, deadline=None)
+def test_cut_bytes_partition(data, seed):
+    arr = np.frombuffer(data, dtype=np.uint8)
+    cuts = cut_bytes(arr, P8)
+    if len(arr) == 0:
+        assert cuts == []
+        return
+    assert cuts[-1] == len(arr)
+    assert all(0 < a < b for a, b in zip(cuts, cuts[1:]))
+    assert max(np.diff([0] + cuts)) <= P8.max_size
+
+
+@given(st.lists(st.binary(min_size=1, max_size=300), min_size=1,
+                max_size=60))
+@settings(max_examples=30, deadline=None)
+def test_cut_elements_alignment(elements):
+    stream = np.frombuffer(b"".join(elements), dtype=np.uint8)
+    bitmap = boundary_bitmap(stream, P8)
+    cuts = cut_elements([len(e) for e in elements], bitmap, P8)
+    assert cuts[-1] == len(elements)
+    assert all(a < b for a, b in zip(cuts, cuts[1:]))
+    # forced split cannot break a single element
+    sizes = np.diff([0] + cuts)
+    assert all(s >= 1 for s in sizes)
+
+
+def test_index_cuts_fanout(rng):
+    cids = [rng.bytes(32) for _ in range(5000)]
+    cuts = index_cuts(cids, P8)
+    assert cuts[-1] == len(cids)
+    fan = np.diff([0] + cuts)
+    assert fan.max() <= P8.index_max_fanout
+    assert 20 < fan.mean() < 200      # E[fanout] = 2^6 = 64
