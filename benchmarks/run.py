@@ -1,7 +1,11 @@
 """Benchmark driver: one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV rows (common.emit)."""
+Prints ``name,us_per_call,derived`` CSV rows (common.emit).
+``put_breakdown`` additionally emits BENCH_storage.json (per-chunk vs
+batched commit throughput); the summary is echoed at the end."""
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 
@@ -21,6 +25,16 @@ def main() -> None:
         m = __import__(f"benchmarks.{mod}", fromlist=["run"])
         m.run()
         print(f"# --- {mod} done in {time.time() - t0:.1f}s", flush=True)
+    if "put_breakdown" in only:
+        from .put_breakdown import BENCH_JSON
+        if os.path.exists(BENCH_JSON):
+            b = json.load(open(BENCH_JSON))
+            print(f"# storage pipeline: per-chunk "
+                  f"{b['per_chunk_put_mb_s']:.0f}MB/s -> batched "
+                  f"{b['batched_put_mb_s']:.0f}MB/s "
+                  f"(x{b['batched_speedup']:.2f}); value commit "
+                  f"{b['value_chunks']} chunks in "
+                  f"{b['value_put_batches']} batch(es)")
 
 
 if __name__ == "__main__":

@@ -26,6 +26,7 @@ import numpy as np
 
 from ..core import ForkBase, FBlob, FMap, POSTree, load_fobject
 from ..core import chunk as ck
+from ..storage import WriteBuffer
 
 
 def _leaf_paths(tree):
@@ -51,13 +52,16 @@ class CheckpointStore:
         leaves, _ = _leaf_paths(state)
         head = self.db.get(self.key, branch)
         manifest = (head.map() if head is not None else FMap())
+        # one put_many for the chunks of ALL tensors in this checkpoint
+        batch = WriteBuffer(self.db.store)
         for name, leaf in leaves:
             arr = np.asarray(leaf)
             blob = FBlob(arr.tobytes())
-            root = blob.commit(self.db.store)
+            root = blob.commit(batch)
             meta = {"cid": root.hex(), "dtype": str(arr.dtype),
                     "shape": list(arr.shape)}
             manifest.set(name.encode(), json.dumps(meta).encode())
+        batch.flush()
         ctx = json.dumps({"step": step, **(extra or {})}).encode()
         return self.db.put(self.key, manifest, branch, context=ctx)
 
@@ -68,13 +72,15 @@ class CheckpointStore:
         heads, paper §3.3.2)."""
         leaves, _ = _leaf_paths(state)
         manifest = self.db.get(self.key, uid=base_uid).map()
+        batch = WriteBuffer(self.db.store)
         for name, leaf in leaves:
             arr = np.asarray(leaf)
             blob = FBlob(arr.tobytes())
-            root = blob.commit(self.db.store)
+            root = blob.commit(batch)
             manifest.set(name.encode(), json.dumps(
                 {"cid": root.hex(), "dtype": str(arr.dtype),
                  "shape": list(arr.shape)}).encode())
+        batch.flush()
         ctx = json.dumps({"step": step, **(extra or {})}).encode()
         return self.db.put(self.key, manifest, base_uid=base_uid,
                            context=ctx)

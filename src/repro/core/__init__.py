@@ -6,7 +6,9 @@ Public surface:
   FBlob/FList/FMap/FSet     — chunkable types (POS-Tree backed)
   FString/FTuple/FInt       — primitive types
   POSTree (postree.py)      — Pattern-Oriented-Split Tree
-  ChunkStore                — content-addressed chunk storage
+  ChunkStore                — content-addressed chunk storage (alias of
+                              repro.storage.MemoryBackend; every store
+                              implements storage.StorageBackend, batched)
 """
 from .branch import DEFAULT_BRANCH, GuardFailed
 from .chunker import ChunkParams, DEFAULT_PARAMS
@@ -18,6 +20,8 @@ from .merge import (BUILTIN_RESOLVERS, Conflict, MergeConflict,
                     aggregate_resolver, append_resolver, choose_one, lca)
 from .postree import POSTree
 from .types import FBlob, FInt, FList, FMap, FSet, FString, FTuple
+from ..storage import (ChunkMissing, StorageBackend, WriteBuffer,
+                       make_backend)
 
 __all__ = [
     "ForkBase", "Cluster", "ChunkStore", "ReplicatedStore", "POSTree",
@@ -26,4 +30,5 @@ __all__ = [
     "GuardFailed", "TypeNotMatch", "ValueHandle", "MergeConflict",
     "Conflict", "BUILTIN_RESOLVERS", "choose_one", "append_resolver",
     "aggregate_resolver", "lca", "load_fobject", "make_fobject",
+    "StorageBackend", "ChunkMissing", "WriteBuffer", "make_backend",
 ]

@@ -1,126 +1,18 @@
-"""Content-addressed chunk storage (paper §4.4).
+"""Content-addressed chunk storage (paper §4.4) — compatibility facade.
 
-Key = cid, value = raw chunk bytes.  Immutable chunks, dedup on Put (an
-existing cid is acknowledged without rewriting), optional log-structured
-file persistence, optional k-way replication across instances (cluster.py
-wires multiple stores into the cid-partitioned pool).
+The implementations live in ``repro.storage`` behind the single
+``StorageBackend`` protocol; the historical names are preserved here:
+
+  ChunkStore      -> storage.MemoryBackend (memory + optional log file)
+  ReplicatedStore -> storage.ReplicatedBackend
 """
 from __future__ import annotations
 
-import os
-import struct
-from dataclasses import dataclass, field
+from ..storage import (ChunkMissing, MemoryBackend, ReplicatedBackend,
+                       StorageBackend, StoreStats)
 
-from .chunk import cid_of
-from .hashing import CID_LEN
+ChunkStore = MemoryBackend
+ReplicatedStore = ReplicatedBackend
 
-_LEN = struct.Struct("<I")
-
-
-@dataclass
-class StoreStats:
-    puts: int = 0                 # Put-Chunk requests
-    dedup_hits: int = 0           # Puts acknowledged via existing cid
-    gets: int = 0
-    logical_bytes: int = 0        # sum of bytes across all Puts
-    physical_bytes: int = 0       # bytes actually stored (post-dedup)
-
-    @property
-    def dedup_ratio(self) -> float:
-        return self.logical_bytes / max(1, self.physical_bytes)
-
-
-class ChunkStore:
-    """In-memory content-addressed store with optional append-only log."""
-
-    def __init__(self, log_path: str | None = None, verify: bool = False):
-        self._data: dict[bytes, bytes] = {}
-        self.stats = StoreStats()
-        self.verify = verify
-        self._log = open(log_path, "ab") if log_path else None
-        if log_path and os.path.getsize(log_path) > 0:
-            self._replay(log_path)
-
-    # -- core KV interface ---------------------------------------------
-    def put(self, raw: bytes, cid: bytes | None = None) -> bytes:
-        if cid is None:
-            cid = cid_of(raw)
-        elif self.verify:
-            assert cid == cid_of(raw), "cid/content mismatch on Put-Chunk"
-        st = self.stats
-        st.puts += 1
-        st.logical_bytes += len(raw)
-        if cid in self._data:
-            st.dedup_hits += 1     # immediate ack, chunk reused (§4.4)
-            return cid
-        self._data[cid] = raw
-        st.physical_bytes += len(raw)
-        if self._log is not None:
-            self._log.write(cid + _LEN.pack(len(raw)) + raw)
-        return cid
-
-    def get(self, cid: bytes) -> bytes:
-        self.stats.gets += 1
-        raw = self._data[cid]
-        if self.verify:
-            assert cid_of(raw) == cid, "tampered chunk detected"
-        return raw
-
-    def has(self, cid: bytes) -> bool:
-        return cid in self._data
-
-    def __len__(self) -> int:
-        return len(self._data)
-
-    def flush(self) -> None:
-        if self._log is not None:
-            self._log.flush()
-            os.fsync(self._log.fileno())
-
-    def _replay(self, path: str) -> None:
-        with open(path, "rb") as f:
-            while True:
-                head = f.read(CID_LEN + 4)
-                if len(head) < CID_LEN + 4:
-                    break
-                cid = head[:CID_LEN]
-                (ln,) = _LEN.unpack(head[CID_LEN:])
-                raw = f.read(ln)
-                if len(raw) < ln:
-                    break  # torn tail write: recover prefix
-                self._data[cid] = raw
-                self.stats.physical_bytes += ln
-
-
-class ReplicatedStore:
-    """k-way replication over several ChunkStores (paper §4.4): dedup is
-    preserved globally — at most k copies of any chunk exist."""
-
-    def __init__(self, stores: list[ChunkStore], k: int = 2):
-        assert stores
-        self.stores = stores
-        self.k = min(k, len(stores))
-
-    def _ring(self, cid: bytes) -> list[ChunkStore]:
-        h = int.from_bytes(cid[:8], "little")
-        n = len(self.stores)
-        return [self.stores[(h + i) % n] for i in range(self.k)]
-
-    def put(self, raw: bytes, cid: bytes | None = None) -> bytes:
-        if cid is None:
-            cid = cid_of(raw)
-        for s in self._ring(cid):
-            s.put(raw, cid)
-        return cid
-
-    def get(self, cid: bytes) -> bytes:
-        err: Exception | None = None
-        for s in self._ring(cid):
-            try:
-                return s.get(cid)
-            except KeyError as e:  # replica lost -> fail over
-                err = e
-        raise err  # type: ignore[misc]
-
-    def has(self, cid: bytes) -> bool:
-        return any(s.has(cid) for s in self._ring(cid))
+__all__ = ["ChunkStore", "ReplicatedStore", "StoreStats", "StorageBackend",
+           "ChunkMissing"]

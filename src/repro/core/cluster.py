@@ -21,6 +21,8 @@ from . import chunk as ck
 from .chunker import ChunkParams, DEFAULT_PARAMS
 from .chunkstore import ChunkStore
 from .db import ForkBase
+from ..storage import BackendBase, resolve_cids
+from ..storage.backend import group_by, put_via
 
 
 def _h(data: bytes) -> int:
@@ -35,12 +37,15 @@ class NodeStats:
     build_work: int = 0      # POS-Tree construction work units (bytes)
 
 
-class _RoutingStore:
-    """Store facade a servlet writes through: meta chunks pinned locally,
+class _RoutingStore(BackendBase):
+    """StorageBackend a servlet writes through: meta chunks pinned locally,
     data chunks placed by cid hash across the pool (2LP) or locally (1LP).
-    Reads go straight to the owning node (dispatcher fast path, §4.6)."""
+    Batched puts group chunks per target node — one put_many per node per
+    batch, the cluster analogue of the §4.6.1 pipeline.  Reads go straight
+    to the owning node (dispatcher fast path, §4.6)."""
 
     def __init__(self, cluster: "Cluster", home: int):
+        super().__init__()
         self.cluster = cluster
         self.home = home
 
@@ -49,33 +54,62 @@ class _RoutingStore:
             return self.home
         return _h(cid) % len(self.cluster.nodes)
 
-    def put(self, raw: bytes, cid: bytes | None = None) -> bytes:
-        if cid is None:
-            cid = ck.cid_of(raw)
-        if ck.chunk_type(raw) == ck.META:
-            node = self.home          # meta chunks always local (§4.6)
-        else:
-            node = self._owner(cid)
-        st = self.cluster.nodes[node]
-        before = len(st.store)
-        st.store.put(raw, cid)
-        if len(st.store) > before:
-            st.stats.chunk_bytes += len(raw)
-            st.stats.chunks += 1
-        self.cluster.index[cid] = node
-        return cid
+    def _placement(self, raws):
+        """owner_of for put batches: meta chunks pin to the home servlet
+        (§4.6), data chunks place by cid hash."""
+        def owner(i, cid):
+            if ck.chunk_type(raws[i]) == ck.META:
+                return self.home
+            return self._owner(cid)
+        return owner
 
-    def get(self, cid: bytes) -> bytes:
+    def _location(self, i, cid):
+        """owner_of for read batches: master index, else cid placement."""
         node = self.cluster.index.get(cid)
-        if node is None:
-            node = self._owner(cid)
-        st = self.cluster.nodes[node]
-        st.stats.requests += 1
-        return st.store.get(cid)
+        return self._owner(cid) if node is None else node
 
-    def has(self, cid: bytes) -> bool:
-        node = self.cluster.index.get(cid, self._owner(cid))
-        return self.cluster.nodes[node].store.has(cid)
+    def put_many(self, raws, cids=None) -> list[bytes]:
+        raws = [bytes(r) for r in raws]
+        out = resolve_cids(raws, cids)
+        st = self.stats
+        st.put_batches += 1
+        st.puts += len(raws)
+        st.logical_bytes += sum(len(r) for r in raws)
+        for node, (_, cs, rs) in group_by(self._placement(raws),
+                                          out, raws).items():
+            n = self.cluster.nodes[node]
+            _, new_chunks, new_bytes = put_via(st, n.store, rs, cs)
+            n.stats.chunks += new_chunks
+            n.stats.chunk_bytes += new_bytes
+            for cid in cs:
+                self.cluster.index[cid] = node
+        return out
+
+    def get_many(self, cids) -> list[bytes]:
+        st = self.stats
+        st.get_batches += 1
+        st.gets += len(cids)
+        out: list[bytes | None] = [None] * len(cids)
+        for node, (idx, cs, _) in group_by(self._location, cids).items():
+            n = self.cluster.nodes[node]
+            n.stats.requests += len(cs)
+            for i, raw in zip(idx, n.store.get_many(cs)):
+                out[i] = raw
+        return out  # type: ignore[return-value]
+
+    def has_many(self, cids) -> list[bool]:
+        out = [False] * len(cids)
+        for node, (idx, cs, _) in group_by(self._location, cids).items():
+            for i, p in zip(idx, self.cluster.nodes[node].store.has_many(cs)):
+                out[i] = p
+        return out
+
+    def __len__(self) -> int:
+        return len(self.cluster.index)
+
+    def flush(self) -> None:
+        for n in self.cluster.nodes:
+            n.store.flush()
 
 
 @dataclass
@@ -99,9 +133,13 @@ class Cluster:
             node.servlet = ForkBase(_RoutingStore(self, i), params)
 
     # ---- dispatcher (layer 1) ----
-    def servlet_of(self, key: bytes) -> ForkBase:
+    def _home_index(self, key) -> int:
+        """Key-hash routing (hashed exactly once per dispatch)."""
         key = key.encode() if isinstance(key, str) else bytes(key)
-        i = _h(key) % len(self.nodes)
+        return _h(key) % len(self.nodes)
+
+    def servlet_of(self, key: bytes) -> ForkBase:
+        i = self._home_index(key)
         self.nodes[i].stats.requests += 1
         return self.nodes[i].servlet
 
@@ -129,18 +167,17 @@ class Cluster:
         embedding the returned root cid itself.  We model load with the
         build_work counter; the branch-table update always happens on the
         key's home servlet (returned here)."""
-        home = self.servlet_of(key)
+        owner = self.nodes[self._home_index(key)]
+        owner.stats.requests += 1             # one dispatch, counted once
         size = _value_size(value)
         hi = max(self.nodes, key=lambda n: n.stats.build_work)
         lo = min(self.nodes, key=lambda n: n.stats.build_work)
-        owner = self.nodes[_h(key.encode() if isinstance(key, str)
-                              else bytes(key)) % len(self.nodes)]
         if (owner is hi and owner.stats.build_work >
                 2 * max(1, lo.stats.build_work) and size > 0):
             lo.stats.build_work += size        # delegated construction
         else:
             owner.stats.build_work += size
-        return home
+        return owner.servlet
 
     # ---- stats ----
     def storage_distribution(self) -> list[int]:

@@ -17,6 +17,7 @@ from . import merge as mg
 from .branch import DEFAULT_BRANCH, BranchTable, GuardFailed
 from .chunker import ChunkParams, DEFAULT_PARAMS
 from .chunkstore import ChunkStore
+from ..storage import StorageBackend, WriteBuffer
 from .fobject import (CHUNKABLE_TYPES, FObject, load_fobject, make_fobject)
 from .postree import POSTree
 from .types import (CHUNKABLE_CLASSES, FBlob, FInt, FList, FMap, FSet,
@@ -86,17 +87,19 @@ class ForkBase:
     """Embedded single-servlet engine (one servlet + one chunk storage,
     §4.1).  cluster.Cluster wires several of these behind a dispatcher."""
 
-    def __init__(self, store: ChunkStore | None = None,
+    def __init__(self, store: StorageBackend | None = None,
                  params: ChunkParams = DEFAULT_PARAMS):
         self.store = store if store is not None else ChunkStore()
         self.params = params
         self.branches = BranchTable()
 
     # ------------------------------------------------------------- put
-    def _commit_value(self, value) -> tuple[int, bytes]:
+    def _commit_value(self, value, store=None) -> tuple[int, bytes]:
         """Returns (object type, data field bytes)."""
+        if store is None:
+            store = self.store
         if hasattr(value, "commit"):          # chunkable handle
-            root = value.commit(self.store)
+            root = value.commit(store)
             return value.TYPE, root
         if hasattr(value, "encode"):          # primitive
             return value.TYPE, value.encode()
@@ -121,9 +124,14 @@ class ForkBase:
             bases = (head,) if head else ()
             base_depth = (load_fobject(self.store, head).depth
                           if head else -1)
-        t, data = self._commit_value(value)
-        obj = make_fobject(self.store, t, key, data, bases, context,
+        # batched chunk pipeline (§4.6.1): every chunk of this value —
+        # POS-Tree leaves, index nodes, the meta chunk — accumulates in
+        # one WriteBuffer and hits the store as a single put_many.
+        batch = WriteBuffer(self.store)
+        t, data = self._commit_value(value, batch)
+        obj = make_fobject(batch, t, key, data, bases, context,
                            base_depth)
+        batch.flush()
         self.branches.on_new_version(key, obj.uid, bases)
         if base_uid is None:
             self.branches.set_head(key, branch, obj.uid)

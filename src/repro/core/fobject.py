@@ -78,7 +78,11 @@ class FObject:
 def make_fobject(store, type_: int, key: bytes, data: bytes,
                  bases: tuple[bytes, ...], context: bytes = b"",
                  base_depth: int = -1) -> FObject:
-    """Construct, persist and uid-stamp a new FObject meta chunk."""
+    """Construct, persist and uid-stamp a new FObject meta chunk.
+
+    ``store`` is any StorageBackend; when it is the value's WriteBuffer
+    (db.put), the meta chunk rides the same put_many batch as the value's
+    tree chunks, so a whole version commits in one store round-trip."""
     obj = FObject(type_, key, data, base_depth + 1, bases, context)
     raw = obj.serialize()
     uid = store.put(raw)

@@ -9,17 +9,22 @@ DESIGN.md §3 hardware-adaptation table).
 from __future__ import annotations
 
 import hashlib
-from typing import Callable
+from typing import Callable, Sequence
 
 # A cid is the raw 32-byte digest of chunk bytes.  We keep bytes (not hex)
 # internally; hex only at display boundaries.
 CID_LEN = 32
 
 HashFn = Callable[[bytes], bytes]
+BatchHashFn = Callable[[Sequence[bytes]], "list[bytes]"]
 
 
 def sha256(data: bytes) -> bytes:
     return hashlib.sha256(data).digest()
+
+
+def sha256_many(blobs: Sequence[bytes]) -> list[bytes]:
+    return [hashlib.sha256(b).digest() for b in blobs]
 
 
 def blake2b_256(data: bytes) -> bytes:
@@ -27,16 +32,39 @@ def blake2b_256(data: bytes) -> bytes:
 
 
 _DEFAULT: HashFn = sha256
+_DEFAULT_MANY: BatchHashFn = sha256_many
 
 
-def set_default_hash(fn: HashFn) -> None:
-    global _DEFAULT
+def set_default_hash(fn: HashFn, many: BatchHashFn | None = None) -> None:
+    """Swap the cid hash.  ``many`` is the vectorized entry point used by
+    the batched store pipeline; without one, the singular fn is mapped."""
+    global _DEFAULT, _DEFAULT_MANY
     _DEFAULT = fn
+    _DEFAULT_MANY = many if many is not None else (
+        lambda blobs: [fn(b) for b in blobs])
+
+
+def use_fphash() -> None:
+    """Route cid computation through the Pallas ``fphash`` kernel: the
+    batched entry point hashes all chunks of a value in ONE kernel launch
+    (kernels/fphash.fphash_many).  sha256 stays the verifiable default."""
+    from ..kernels.fphash import fphash, fphash_many
+    set_default_hash(fphash, fphash_many)
+
+
+def use_sha256() -> None:
+    set_default_hash(sha256, sha256_many)
 
 
 def content_hash(data: bytes) -> bytes:
     """chunk.cid = H(chunk.bytes)  (paper §4.2.1)."""
     return _DEFAULT(data)
+
+
+def content_hash_many(blobs: Sequence[bytes]) -> list[bytes]:
+    """Vectorized cid computation for a batch of chunks — one dispatch for
+    the whole batch (one Pallas launch per value on the fphash path)."""
+    return _DEFAULT_MANY(list(blobs))
 
 
 def hex(cid: bytes) -> str:

@@ -30,6 +30,7 @@ from . import chunk as ck
 from .chunk import Entry
 from .chunker import (ChunkParams, DEFAULT_PARAMS, boundary_bitmap,
                       cut_bytes, cut_elements, index_cuts)
+from ..storage import WriteBuffer
 
 SORTED_KINDS = (ck.SET, ck.MAP)
 
@@ -41,9 +42,34 @@ class POSTree:
         self.kind = kind
         self.levels = levels
         self.params = params
+        self._buf: WriteBuffer | None = None      # active commit batch
         self._leaf_cache: dict[int, list] = {}
         self._cum: np.ndarray | None = None       # leaf cumulative counts
         self._keycache: list[bytes] | None = None  # leaf max keys (sorted)
+
+    # ------------------------------------------------- batched chunk I/O
+    # All chunks written during one build/splice commit accumulate in a
+    # WriteBuffer and reach the store as a single put_many (§4.6.1); reads
+    # during the commit see pending chunks through the buffer.
+    def _open_batch(self, sink=None) -> None:
+        """``sink`` lets a caller-owned batch (db.put's per-value
+        WriteBuffer) absorb this commit's chunks, so incremental splices
+        ride the same single put_many as the value's meta chunk."""
+        if self._buf is None:
+            self._buf = WriteBuffer(sink if sink is not None else self.store)
+
+    def _commit_batch(self) -> None:
+        if self._buf is not None:
+            self._buf.flush()
+            self._buf = None
+
+    def _put_chunks(self, raws: list[bytes]) -> list[bytes]:
+        tgt = self._buf if self._buf is not None else self.store
+        return tgt.put_many(raws)
+
+    def _get_raw(self, cid: bytes) -> bytes:
+        src = self._buf if self._buf is not None else self.store
+        return src.get(cid)
 
     # ------------------------------------------------------------ build
     @classmethod
@@ -54,13 +80,16 @@ class POSTree:
         if data.size == 0:
             return cls._empty(store, ck.BLOB, params)
         cuts = cut_bytes(data, params)
-        leaves = []
+        buf = WriteBuffer(store)
+        raws, counts = [], []
         start = 0
         for c in cuts:
-            raw = ck.encode_chunk(ck.BLOB, data[start:c].tobytes())
-            leaves.append(Entry(store.put(raw), c - start))
+            raws.append(ck.encode_chunk(ck.BLOB, data[start:c].tobytes()))
+            counts.append(c - start)
             start = c
-        return cls._from_leaves(store, ck.BLOB, leaves, params)
+        leaves = [Entry(cid, cnt)
+                  for cid, cnt in zip(buf.put_many(raws), counts)]
+        return cls._from_leaves(store, ck.BLOB, leaves, params, buf=buf)
 
     @classmethod
     def build_elements(cls, store, kind: int, elements: list[bytes],
@@ -75,15 +104,19 @@ class POSTree:
         bitmap = boundary_bitmap(stream, params)
         lengths = [len(e) for e in elements]
         cuts = cut_elements(lengths, bitmap, params)
-        leaves = []
+        buf = WriteBuffer(store)
+        raws, counts, ekeys = [], [], []
         start = 0
         is_sorted = kind in SORTED_KINDS
         for c in cuts:
-            raw = ck.encode_chunk(kind, b"".join(elements[start:c]))
-            key = keys[c - 1] if (is_sorted and keys is not None) else None
-            leaves.append(Entry(store.put(raw), c - start, key))
+            raws.append(ck.encode_chunk(kind, b"".join(elements[start:c])))
+            counts.append(c - start)
+            ekeys.append(keys[c - 1] if (is_sorted and keys is not None)
+                         else None)
             start = c
-        return cls._from_leaves(store, kind, leaves, params)
+        leaves = [Entry(cid, cnt, key) for cid, cnt, key
+                  in zip(buf.put_many(raws), counts, ekeys)]
+        return cls._from_leaves(store, kind, leaves, params, buf=buf)
 
     @classmethod
     def _empty(cls, store, kind: int, params: ChunkParams) -> "POSTree":
@@ -92,9 +125,12 @@ class POSTree:
         return cls(store, kind, [[Entry(store.put(raw), 0, key)]], params)
 
     @classmethod
-    def _from_leaves(cls, store, kind, leaves, params) -> "POSTree":
+    def _from_leaves(cls, store, kind, leaves, params,
+                     buf: WriteBuffer | None = None) -> "POSTree":
         tree = cls(store, kind, [leaves], params)
+        tree._buf = buf if buf is not None else WriteBuffer(store)
         tree._rebuild_index()
+        tree._commit_batch()
         return tree
 
     @classmethod
@@ -169,7 +205,7 @@ class POSTree:
         return self._cum
 
     def _leaf_payload(self, i: int) -> bytes:
-        return ck.chunk_payload(self.store.get(self.levels[0][i].cid))
+        return ck.chunk_payload(self._get_raw(self.levels[0][i].cid))
 
     def leaf_elements(self, i: int) -> list:
         """Parsed elements of leaf i (bytes-array for Blob, kv tuples for
@@ -275,16 +311,17 @@ class POSTree:
         is_sorted = self.kind in SORTED_KINDS
         while len(entries) > 1:
             cuts = index_cuts([e.cid for e in entries], self.params)
-            nxt = []
+            raws, counts, keys = [], [], []
             start = 0
             for c in cuts:
                 group = entries[start:c]
-                raw = (ck.encode_sindex(group) if is_sorted
-                       else ck.encode_uindex(group))
-                nxt.append(Entry(self.store.put(raw),
-                                 sum(e.count for e in group),
-                                 group[-1].key if is_sorted else None))
+                raws.append(ck.encode_sindex(group) if is_sorted
+                            else ck.encode_uindex(group))
+                counts.append(sum(e.count for e in group))
+                keys.append(group[-1].key if is_sorted else None)
                 start = c
+            nxt = [Entry(cid, cnt, key) for cid, cnt, key
+                   in zip(self._put_chunks(raws), counts, keys)]
             self.levels.append(nxt)
             entries = nxt
 
@@ -302,12 +339,14 @@ class POSTree:
             j -= 1
         return b"".join(reversed(parts))
 
-    def splice_bytes(self, edits: list[tuple[int, int, bytes]]) -> None:
+    def splice_bytes(self, edits: list[tuple[int, int, bytes]],
+                     sink=None) -> None:
         """Blob: apply [(start, end, replacement)] byte splices (sorted,
         non-overlapping) and incrementally re-chunk."""
         assert self.kind == ck.BLOB
         if not edits:
             return
+        self._open_batch(sink)
         leaves = self.levels[0]
         cum = self._cum_counts()
         total = int(cum[-1]) if len(cum) else 0
@@ -351,13 +390,15 @@ class POSTree:
             if splice_at is None and not at_stream_end:
                 grow *= 2
                 continue
-            new_leaves = []
+            raws, counts = [], []
             start = 0
             upto = len(cuts) if splice_at is None else splice_at[0] + 1
             for c in cuts[:upto]:
-                raw = ck.encode_chunk(ck.BLOB, buf[start:c].tobytes())
-                new_leaves.append(Entry(self.store.put(raw), c - start))
+                raws.append(ck.encode_chunk(ck.BLOB, buf[start:c].tobytes()))
+                counts.append(c - start)
                 start = c
+            new_leaves = [Entry(cid, cnt) for cid, cnt
+                          in zip(self._put_chunks(raws), counts)]
             tail = leaves[splice_at[1]:] if splice_at else []
             if len(buf) == 0 and not new_leaves and not tail and j0 == 0:
                 self.levels[0] = self._empty(self.store, ck.BLOB,
@@ -368,10 +409,12 @@ class POSTree:
                     self.levels[0] = self._empty(self.store, ck.BLOB,
                                                  self.params).levels[0]
             self._rebuild_index()
+            self._commit_batch()
             return
 
     def splice_elements(self, edits: list[tuple[int, int, list[bytes],
-                                                list[bytes] | None]]) -> None:
+                                                list[bytes] | None]],
+                        sink=None) -> None:
         """List/Set/Map: [(start, end, new_serialized_elems, new_keys)]
         element-space splices (sorted, non-overlapping).
 
@@ -383,6 +426,7 @@ class POSTree:
         assert self.kind != ck.BLOB
         if not edits:
             return
+        self._open_batch(sink)
         # cluster by element distance (~2 leaves apart -> same span)
         avg_leaf = max(1, self.total_count // max(1, len(self.levels[0])))
         gap = 2 * avg_leaf
@@ -395,6 +439,7 @@ class POSTree:
         for cl in reversed(clusters):
             self._splice_span_elements(cl)
         self._rebuild_index()
+        self._commit_batch()
         return
 
     def _splice_span_elements(self, edits) -> None:
@@ -456,14 +501,17 @@ class POSTree:
             if splice_at is None and not at_stream_end:
                 grow *= 2
                 continue
-            new_leaves = []
+            raws, counts, lkeys = [], [], []
             start = 0
             upto = len(cuts) if splice_at is None else splice_at[0] + 1
             for c in cuts[:upto]:
-                raw = ck.encode_chunk(self.kind, b"".join(els_new[start:c]))
-                key = keys_new[c - 1] if is_sorted else None
-                new_leaves.append(Entry(self.store.put(raw), c - start, key))
+                raws.append(ck.encode_chunk(self.kind,
+                                            b"".join(els_new[start:c])))
+                counts.append(c - start)
+                lkeys.append(keys_new[c - 1] if is_sorted else None)
                 start = c
+            new_leaves = [Entry(cid, cnt, key) for cid, cnt, key
+                          in zip(self._put_chunks(raws), counts, lkeys)]
             tail = leaves[splice_at[1]:] if splice_at else []
             self.levels[0] = leaves[:j0] + new_leaves + tail
             if not self.levels[0]:

@@ -72,7 +72,7 @@ class FBlob:
             self._tree = POSTree.build_bytes(store, self.read(), self.params)
         elif self._pt.dirty:
             edits = self._pt.base_edits(lambda ps: b"".join(ps))
-            self._tree.splice_bytes(edits)
+            self._tree.splice_bytes(edits, sink=store)
         self._pt = PieceTable(self._tree.total_count)
         return self._tree.root_cid
 
@@ -146,7 +146,7 @@ class FList:
                 lambda ps: [x for p in ps for x in p])
             edits = [(s, e, [ck.pack_lv(x) for x in rep], None)
                      for s, e, rep in raw_edits]
-            self._tree.splice_elements(edits)
+            self._tree.splice_elements(edits, sink=store)
         self._pt = PieceTable(self._tree.total_count)
         return self._tree.root_cid
 
@@ -259,7 +259,7 @@ class FMap:
                     edits.append((gi, gi, [ck.pack_kv(k, v)], [k]))
             edits = _coalesce(edits)
             if edits:
-                self._tree.splice_elements(edits)
+                self._tree.splice_elements(edits, sink=store)
         self._ov = {}
         return self._tree.root_cid
 
@@ -335,7 +335,7 @@ class FSet:
                     edits.append((gi, gi + 1, [], []))
             edits = _coalesce(edits)
             if edits:
-                self._tree.splice_elements(edits)
+                self._tree.splice_elements(edits, sink=store)
         self._ov = {}
         return self._tree.root_cid
 

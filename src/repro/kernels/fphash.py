@@ -114,3 +114,102 @@ def fphash(data: bytes) -> bytes:
                jnp.asarray(fp_init_state(), dtype=jnp.uint32),
                nblocks=nblocks)
     return np.asarray(out).astype("<u4").tobytes()
+
+
+# ----------------------------------------------------------- batched path
+#
+# The storage engine commits a value's chunks with one put_many batch;
+# this is the matching hash entry point: ONE kernel launch digests every
+# chunk of the batch.  Grid = (chunk, block); TPU grids iterate serially
+# with the last axis fastest, so the VMEM state accumulator is re-seeded
+# at each chunk's block 0, absorbs only that chunk's own blocks (shorter
+# chunks skip the zero-padding tail), and finalizes into out[chunk] at
+# its last real block — bit-for-bit identical to fphash() per chunk.
+
+def _fphash_many_kernel(words_ref, len_ref, nb_ref, init_ref, out_ref,
+                        state_ref):
+    b = pl.program_id(1)
+    nb = nb_ref[0]
+
+    @pl.when(b == 0)
+    def _init():
+        state_ref[...] = init_ref[...]
+
+    @pl.when(b < nb)
+    def _absorb():
+        state = state_ref[...] ^ words_ref[...].reshape(FP_STATE)
+        for _ in range(FP_ROUNDS):
+            state = _round(state)
+        state_ref[...] = state
+
+    @pl.when(b == nb - 1)
+    def _finalize():
+        st = state_ref[...] ^ len_ref[0].astype(jnp.uint32)
+        st = _round(_round(st))
+        folded = st
+        shift = 64
+        while shift >= 1:   # xor-reduce 128 lanes, log-depth
+            folded = folded ^ pltpu_roll(folded, shift, axis=1)
+            shift //= 2
+        digest = folded[:, 0]
+        digest = _mix32(digest ^ (jax.lax.iota(jnp.uint32, 8) * jnp.uint32(_GOLD)))
+        out_ref[...] = digest.reshape(1, 8)
+
+
+@functools.partial(jax.jit, static_argnames=("nchunks", "maxnb"))
+def _run_many(words, lengths, nbs, init, *, nchunks: int, maxnb: int):
+    return pl.pallas_call(
+        _fphash_many_kernel,
+        grid=(nchunks, maxnb),
+        in_specs=[pl.BlockSpec((1, 1, FP_BLOCK_WORDS), lambda i, b: (i, b, 0)),
+                  pl.BlockSpec((1,), lambda i, b: (i,)),
+                  pl.BlockSpec((1,), lambda i, b: (i,)),
+                  pl.BlockSpec(FP_STATE, lambda i, b: (0, 0))],
+        out_specs=pl.BlockSpec((1, 8), lambda i, b: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nchunks, 8), jnp.uint32),
+        scratch_shapes=[pltpu.VMEM(FP_STATE, jnp.uint32)],
+        interpret=_INTERPRET,
+    )(words, lengths, nbs, init)
+
+
+def _pow2(x: int) -> int:
+    return 1 << max(0, x - 1).bit_length()
+
+
+def fphash_many(blobs) -> list[bytes]:
+    """Vectorized cid path behind ``core.hashing.content_hash_many``:
+    hash a batch of byte strings with one kernel launch per block-count
+    bucket (for typical 4 KB chunk streams that is ONE launch for the
+    whole value).  Rows are bucketed by pow2 block count so one outlier
+    chunk cannot force every row to its width (memory stays O(input
+    bytes), not O(n x max)), and batch counts round up to powers of two,
+    bounding jit retraces to O(log^2) shape buckets.  The kernel masks
+    per-chunk, so padding never enters a digest."""
+    blobs = [bytes(b) for b in blobs]
+    if not blobs:
+        return []
+    nbs = [max(1, -(-max(len(b), 1) // (FP_BLOCK_WORDS * 4))) for b in blobs]
+    buckets: dict[int, list[int]] = {}
+    for i, nb in enumerate(nbs):
+        buckets.setdefault(_pow2(nb), []).append(i)
+    out: list[bytes | None] = [None] * len(blobs)
+    for maxnb, idx in buckets.items():
+        n_pad = _pow2(len(idx))
+        buf = np.zeros((n_pad, maxnb * FP_BLOCK_WORDS * 4), dtype=np.uint8)
+        for r, i in enumerate(idx):
+            buf[r, :len(blobs[i])] = np.frombuffer(blobs[i], dtype=np.uint8)
+        words = buf.view("<u4").astype(np.uint32).reshape(n_pad, maxnb,
+                                                          FP_BLOCK_WORDS)
+        pad = n_pad - len(idx)               # padding rows: 1 empty block
+        lens = [len(blobs[i]) & 0xFFFFFFFF for i in idx] + [0] * pad
+        bnbs = [nbs[i] for i in idx] + [1] * pad
+        res = _run_many(
+            words,
+            jnp.asarray(lens, dtype=jnp.uint32),
+            jnp.asarray(bnbs, dtype=jnp.int32),
+            jnp.asarray(fp_init_state(), dtype=jnp.uint32),
+            nchunks=n_pad, maxnb=maxnb)
+        res = np.asarray(res[:len(idx)]).astype("<u4")
+        for r, i in enumerate(idx):
+            out[i] = res[r].tobytes()
+    return out  # type: ignore[return-value]

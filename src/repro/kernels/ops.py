@@ -35,8 +35,14 @@ def use_pallas_chunker(enable: bool = True) -> None:
 
 
 def use_pallas_hash(enable: bool = True) -> None:
-    _core_hashing.set_default_hash(
-        content_hash if enable else _core_hashing.sha256)
+    """Delegates to hashing.use_fphash/use_sha256 so the batched entry
+    point (fphash_many: one launch per value) switches together with the
+    singular one — a bare set_default_hash(fphash) would silently fall
+    back to one kernel launch per chunk in put_many."""
+    if enable:
+        _core_hashing.use_fphash()
+    else:
+        _core_hashing.use_sha256()
 
 
 __all__ = ["boundary_bitmap", "content_hash", "use_pallas_chunker",

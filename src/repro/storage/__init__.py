@@ -1,0 +1,68 @@
+"""Unified storage-backend layer (paper §4.4, §4.6).
+
+One protocol — ``StorageBackend`` — with a batched core surface
+(``put_many`` / ``get_many`` / ``has_many`` + stats), and composable
+implementations:
+
+  MemoryBackend     in-memory dict, optional log-structured file
+  LRUCacheBackend   LRU read cache over any backend
+  ReplicatedBackend k-way replication with read failover
+  ShardedBackend    cid-hash partitioning across in-process shards
+  WriteBuffer       write-behind batch: one put_many per value commit
+
+``cluster._RoutingStore`` (meta-pinned two-layer partitioning) is the
+sixth implementation; it lives with the cluster because it routes
+through cluster state.
+
+Select or stack backends with ``make_backend``:
+
+    make_backend("memory")
+    make_backend("log", log_path="/tmp/chunks.log")
+    make_backend("lru+sharded", shards=8)          # cache over shards
+    make_backend("replicated", n=4, k=2)
+"""
+from __future__ import annotations
+
+from .backend import (BackendBase, ChunkMissing, StorageBackend, StoreStats,
+                      resolve_cids)
+from .buffer import WriteBuffer
+from .cache import LRUCacheBackend
+from .memory import MemoryBackend
+from .replicated import ReplicatedBackend
+from .sharded import ShardedBackend
+
+__all__ = [
+    "StorageBackend", "BackendBase", "StoreStats", "ChunkMissing",
+    "MemoryBackend", "LRUCacheBackend", "ReplicatedBackend",
+    "ShardedBackend", "WriteBuffer", "make_backend", "resolve_cids",
+]
+
+
+def make_backend(spec: str = "memory", *, log_path: str | None = None,
+                 n: int = 4, k: int = 2, shards: int = 4,
+                 capacity_bytes: int = 64 << 20, verify: bool = False):
+    """Build a backend from a ``+``-separated layer spec, outermost first.
+
+    Base layers: ``memory`` | ``log`` (requires log_path) |
+    ``sharded`` | ``replicated``.  Wrapper layers: ``lru``.
+    """
+    layers = spec.split("+")
+    base = layers[-1]
+    if base == "memory":
+        backend = MemoryBackend(verify=verify)
+    elif base == "log":
+        assert log_path, "log backend needs log_path"
+        backend = MemoryBackend(log_path=log_path, verify=verify)
+    elif base == "sharded":
+        backend = ShardedBackend(shards)
+    elif base == "replicated":
+        backend = ReplicatedBackend([MemoryBackend(verify=verify)
+                                     for _ in range(n)], k=k)
+    else:
+        raise ValueError(f"unknown base backend: {base!r}")
+    for layer in reversed(layers[:-1]):
+        if layer == "lru":
+            backend = LRUCacheBackend(backend, capacity_bytes=capacity_bytes)
+        else:
+            raise ValueError(f"unknown wrapper layer: {layer!r}")
+    return backend

@@ -1,0 +1,190 @@
+"""StorageBackend — the single pluggable chunk-storage abstraction.
+
+Every store in the engine (memory, log-structured file, LRU cache,
+replication, sharding, cluster routing) implements one protocol whose
+core surface is *batched*: ``put_many``/``get_many``/``has_many``.
+Batching is what keeps POS-Tree construction off the critical path
+(paper §4.6.1): a value with N chunks commits with one ``put_many``
+call, whose cid computation routes through the vectorized hash entry
+point (``core.hashing.content_hash_many``) and can dispatch to the
+Pallas ``fphash`` kernel — one kernel launch per value, many chunks per
+launch — instead of N serial host hashes.
+
+Singular ``put``/``get``/``has`` are thin wrappers over the batched
+calls (``BackendBase``), so legacy call sites keep working and count as
+batches of one.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Protocol, Sequence, runtime_checkable
+
+
+class ChunkMissing(KeyError):
+    """A requested cid is not present in the backend (or any replica)."""
+
+    def __init__(self, cid: bytes):
+        super().__init__(cid)
+        self.cid = cid
+
+    def __str__(self) -> str:
+        return f"chunk not found: {self.cid.hex()[:16]}"
+
+
+@dataclass
+class StoreStats:
+    puts: int = 0                 # Put-Chunk requests (per chunk)
+    put_batches: int = 0          # put_many calls (the batching win metric)
+    dedup_hits: int = 0           # Puts acknowledged via existing cid
+    gets: int = 0                 # Get-Chunk requests (per chunk)
+    get_batches: int = 0          # get_many calls
+    cache_hits: int = 0           # reads served by a cache layer
+    logical_bytes: int = 0        # sum of bytes across all Puts
+    physical_bytes: int = 0       # bytes actually stored (post-dedup)
+
+    @property
+    def dedup_ratio(self) -> float:
+        return self.logical_bytes / max(1, self.physical_bytes)
+
+
+@runtime_checkable
+class StorageBackend(Protocol):
+    """What every chunk store implements.  Content-addressed, immutable
+    chunks; dedup on Put (existing cids are acknowledged, not rewritten);
+    missing reads raise ChunkMissing."""
+
+    stats: StoreStats
+
+    def put_many(self, raws: Sequence[bytes],
+                 cids: Sequence[bytes | None] | None = None) -> list[bytes]:
+        ...
+
+    def get_many(self, cids: Sequence[bytes]) -> list[bytes]:
+        ...
+
+    def has_many(self, cids: Sequence[bytes]) -> list[bool]:
+        ...
+
+    def put(self, raw: bytes, cid: bytes | None = None) -> bytes:
+        ...
+
+    def get(self, cid: bytes) -> bytes:
+        ...
+
+    def has(self, cid: bytes) -> bool:
+        ...
+
+    def __len__(self) -> int:
+        ...
+
+    def flush(self) -> None:
+        ...
+
+
+def resolve_cids(raws: Sequence[bytes],
+                 cids: Sequence[bytes | None] | None) -> list[bytes]:
+    """Fill in missing cids with one vectorized hash batch."""
+    # Imported lazily: core imports storage (chunkstore shim), so a
+    # module-scope import here would cycle through repro.core.__init__.
+    from ..core.hashing import content_hash_many
+
+    if cids is None:
+        return content_hash_many(raws)
+    out = list(cids)
+    missing = [i for i, c in enumerate(out) if c is None]
+    if missing:
+        hashed = content_hash_many([raws[i] for i in missing])
+        for i, h in zip(missing, hashed):
+            out[i] = h
+    return out
+
+
+def group_by(owner_of, cids: Sequence[bytes],
+             payloads: Sequence[bytes] | None = None
+             ) -> "dict[int, tuple[list[int], list[bytes], list[bytes]]]":
+    """Partition a batch by owner for scatter/gather routing: returns
+    {owner: (original indices, cids, payloads)}.  ``owner_of(i, cid)``
+    lets the caller pin by payload too (e.g. meta chunks -> home node)."""
+    groups: dict[int, tuple[list[int], list[bytes], list[bytes]]] = {}
+    for i, cid in enumerate(cids):
+        g = groups.setdefault(owner_of(i, cid), ([], [], []))
+        g[0].append(i)
+        g[1].append(cid)
+        if payloads is not None:
+            g[2].append(payloads[i])
+    return groups
+
+
+def overlay_get_many(local: dict, cids: Sequence[bytes], fetch,
+                     on_hit=None, on_fetch=None) -> list[bytes]:
+    """Serve a read batch from a local dict overlay, forwarding only the
+    misses to ``fetch`` in one call (shared by WriteBuffer pending reads
+    and the LRU cache)."""
+    out: list[bytes | None] = []
+    miss_idx: list[int] = []
+    miss_cids: list[bytes] = []
+    for i, cid in enumerate(cids):
+        raw = local.get(cid)
+        out.append(raw)
+        if raw is None:
+            miss_idx.append(i)
+            miss_cids.append(cid)
+        elif on_hit is not None:
+            on_hit(cid)
+    if miss_cids:
+        for i, cid, raw in zip(miss_idx, miss_cids, fetch(miss_cids)):
+            out[i] = raw
+            if on_fetch is not None:
+                on_fetch(cid, raw)
+    return out  # type: ignore[return-value]
+
+
+def overlay_has_many(local: dict, cids: Sequence[bytes],
+                     inner_has_many) -> list[bool]:
+    """has_many against a local overlay + inner backend, batching the
+    inner probe."""
+    in_local = [cid in local for cid in cids]
+    if all(in_local):
+        return in_local
+    rest = iter(inner_has_many([c for c, hit in zip(cids, in_local)
+                                if not hit]))
+    return [hit or next(rest) for hit in in_local]
+
+
+def put_via(stats: StoreStats, child, raws: Sequence[bytes],
+            cids: Sequence[bytes | None] | None, *,
+            count_dedup: bool = True) -> tuple[list[bytes], int, int]:
+    """Forward one group of chunks to a child backend and absorb its
+    dedup/physical deltas into ``stats`` (the shared bookkeeping of every
+    composite backend: cache, sharded, replicated, routing).  Returns
+    (cids, newly stored chunk count, newly stored bytes)."""
+    c0 = len(child)
+    d0 = child.stats.dedup_hits
+    p0 = child.stats.physical_bytes
+    out = child.put_many(raws, cids)
+    new_bytes = child.stats.physical_bytes - p0
+    if count_dedup:
+        stats.dedup_hits += child.stats.dedup_hits - d0
+    stats.physical_bytes += new_bytes
+    return out, len(child) - c0, new_bytes
+
+
+class BackendBase:
+    """Common plumbing: stats + singular ops as batches of one."""
+
+    def __init__(self) -> None:
+        self.stats = StoreStats()
+
+    def put(self, raw: bytes, cid: bytes | None = None) -> bytes:
+        return self.put_many([raw], [cid])[0]
+
+    def get(self, cid: bytes) -> bytes:
+        return self.get_many([cid])[0]
+
+    def has(self, cid: bytes) -> bool:
+        return self.has_many([cid])[0]
+
+    def flush(self) -> None:
+        pass
+
+    # subclasses implement put_many / get_many / has_many / __len__

@@ -1,0 +1,67 @@
+"""LRU read-cache layer: composes over any StorageBackend, serving hot
+chunk reads from memory (the paper's servlets keep hot tree nodes
+resident; this is that layer made explicit and stackable)."""
+from __future__ import annotations
+
+from collections import OrderedDict
+
+from .backend import (BackendBase, overlay_get_many, overlay_has_many,
+                      put_via)
+
+
+class LRUCacheBackend(BackendBase):
+    """Write-through LRU over ``inner``, bounded by ``capacity_bytes``."""
+
+    def __init__(self, inner, capacity_bytes: int = 64 << 20):
+        super().__init__()
+        self.inner = inner
+        self.capacity_bytes = capacity_bytes
+        self._cache: OrderedDict[bytes, bytes] = OrderedDict()
+        self._cache_bytes = 0
+
+    def _admit(self, cid: bytes, raw: bytes) -> None:
+        if cid in self._cache:
+            self._cache.move_to_end(cid)
+            return
+        self._cache[cid] = raw
+        self._cache_bytes += len(raw)
+        while self._cache_bytes > self.capacity_bytes and len(self._cache) > 1:
+            _, old = self._cache.popitem(last=False)
+            self._cache_bytes -= len(old)
+
+    # ------------------------------------------------------------ batched
+    def put_many(self, raws, cids=None) -> list[bytes]:
+        raws = [bytes(r) for r in raws]
+        st = self.stats
+        st.put_batches += 1
+        out, _, _ = put_via(st, self.inner, raws, cids)
+        for raw, cid in zip(raws, out):
+            st.puts += 1
+            st.logical_bytes += len(raw)
+            self._admit(cid, raw)
+        return out
+
+    def get_many(self, cids) -> list[bytes]:
+        st = self.stats
+        st.get_batches += 1
+        st.gets += len(cids)
+
+        def on_hit(cid):
+            self._cache.move_to_end(cid)
+            st.cache_hits += 1
+
+        return overlay_get_many(self._cache, cids, self.inner.get_many,
+                                on_hit=on_hit, on_fetch=self._admit)
+
+    def has_many(self, cids) -> list[bool]:
+        return overlay_has_many(self._cache, cids, self.inner.has_many)
+
+    @property
+    def hit_rate(self) -> float:
+        return self.stats.cache_hits / max(1, self.stats.gets)
+
+    def __len__(self) -> int:
+        return len(self.inner)
+
+    def flush(self) -> None:
+        self.inner.flush()

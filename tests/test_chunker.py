@@ -1,6 +1,8 @@
 """Rolling hash + content-defined chunking invariants."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the dev extra
 from hypothesis import given, settings, strategies as st
 
 from repro.core import rolling

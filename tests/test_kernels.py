@@ -1,6 +1,8 @@
 """Pallas kernel oracle sweeps: shapes x dtypes x params vs ref.py."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the dev extra
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.chunker import boundary_bitmap_pallas

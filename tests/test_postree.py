@@ -2,6 +2,8 @@
 equal content <=> identical root cid, independent of edit history."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the dev extra
 from hypothesis import given, settings, strategies as st
 
 from repro.core import chunk as ck

@@ -1,0 +1,233 @@
+"""Backend conformance: one shared put/get/has/dedup/stats suite over
+every StorageBackend implementation (memory, log, LRU, replicated,
+sharded, cluster routing), plus the batched-pipeline invariants:
+a value with N chunks commits via one put_many batch, and the
+vectorized fphash path matches the per-chunk kernel bit-for-bit."""
+import numpy as np
+import pytest
+
+from repro.core import Cluster, ForkBase, FBlob, FMap
+from repro.core.chunk import cid_of, encode_chunk
+from repro.storage import (ChunkMissing, LRUCacheBackend, MemoryBackend,
+                           ReplicatedBackend, ShardedBackend, StorageBackend,
+                           WriteBuffer, make_backend)
+
+BACKENDS = ["memory", "log", "lru", "replicated", "sharded", "routing"]
+
+
+@pytest.fixture
+def backend(request, tmp_path):
+    name = request.param
+    if name == "memory":
+        return MemoryBackend()
+    if name == "log":
+        return MemoryBackend(log_path=str(tmp_path / "chunks.log"))
+    if name == "lru":
+        return LRUCacheBackend(MemoryBackend(), capacity_bytes=1 << 20)
+    if name == "replicated":
+        return ReplicatedBackend([MemoryBackend() for _ in range(3)], k=2)
+    if name == "sharded":
+        return ShardedBackend(4)
+    if name == "routing":
+        return Cluster(3).nodes[0].servlet.store
+    raise AssertionError(name)
+
+
+def chunks(rng, n=24, size=400):
+    return [encode_chunk(3, rng.bytes(size) + bytes([i])) for i in range(n)]
+
+
+all_backends = pytest.mark.parametrize("backend", BACKENDS, indirect=True)
+
+
+@all_backends
+def test_satisfies_protocol(backend):
+    assert isinstance(backend, StorageBackend)
+
+
+@all_backends
+def test_put_get_roundtrip_singular(backend, rng):
+    raw = encode_chunk(3, rng.bytes(1000))
+    cid = backend.put(raw)
+    assert cid == cid_of(raw)
+    assert backend.get(cid) == raw
+    assert backend.has(cid)
+
+
+@all_backends
+def test_batched_roundtrip_preserves_order(backend, rng):
+    raws = chunks(rng)
+    cids = backend.put_many(raws)
+    assert cids == [cid_of(r) for r in raws]
+    assert backend.get_many(cids) == raws
+    assert backend.get_many(list(reversed(cids))) == list(reversed(raws))
+    assert all(backend.has_many(cids))
+
+
+@all_backends
+def test_explicit_cids_accepted(backend, rng):
+    raws = chunks(rng, n=5)
+    pre = [cid_of(r) for r in raws]
+    assert backend.put_many(raws, pre) == pre
+    assert backend.get_many(pre) == raws
+
+
+@all_backends
+def test_missing_chunk_raises(backend, rng):
+    backend.put_many(chunks(rng, n=3))
+    ghost = bytes(32)
+    assert backend.has_many([ghost]) == [False]
+    with pytest.raises(KeyError):        # ChunkMissing subclasses KeyError
+        backend.get(ghost)
+
+
+@all_backends
+def test_dedup_on_put(backend, rng):
+    raw = encode_chunk(3, rng.bytes(2000))
+    backend.put(raw)
+    phys = backend.stats.physical_bytes
+    backend.put(raw)
+    backend.put_many([raw, raw])
+    st = backend.stats
+    assert st.physical_bytes == phys          # stored once (k copies max)
+    assert st.dedup_hits >= 3
+    assert st.logical_bytes == 4 * len(raw)
+    k = getattr(backend, "k", 1)              # replication is physical
+    assert st.dedup_ratio > 3.9 / k
+
+
+@all_backends
+def test_len_counts_distinct_chunks(backend, rng):
+    raws = chunks(rng, n=10)
+    backend.put_many(raws + raws[:4])
+    assert len(backend) == 10
+
+
+@all_backends
+def test_stats_count_batches(backend, rng):
+    raws = chunks(rng, n=16)
+    cids = backend.put_many(raws)
+    backend.get_many(cids)
+    st = backend.stats
+    assert st.puts == 16 and st.put_batches == 1
+    assert st.gets == 16 and st.get_batches == 1
+
+
+@all_backends
+def test_flush_is_safe(backend, rng):
+    cid = backend.put(encode_chunk(3, rng.bytes(100)))
+    backend.flush()
+    assert backend.get(cid)
+
+
+# ------------------------------------------------------- batched pipeline
+
+@pytest.mark.parametrize("backend", ["memory"], indirect=True)
+def test_value_commits_in_one_batch(backend, rng):
+    """Acceptance: N-chunk value -> one put_many (batch calls << chunks)."""
+    db = ForkBase(backend)
+    db.put("blob", FBlob(rng.bytes(300_000)))
+    st = backend.stats
+    assert st.put_batches == 1
+    assert st.puts > 20 * st.put_batches
+    db.put("map", FMap({b"k%04d" % i: rng.bytes(64) for i in range(3000)}))
+    assert st.put_batches == 2
+    assert st.puts > 20 * st.put_batches
+
+
+@pytest.mark.parametrize("backend", ["memory"], indirect=True)
+def test_write_buffer_nests_and_passes_through(backend, rng):
+    outer = WriteBuffer(backend)
+    inner = WriteBuffer(outer)
+    raws = chunks(rng, n=6)
+    cids = inner.put_many(raws)
+    assert inner.get_many(cids) == raws       # reads see pending chunks
+    assert len(backend) == 0
+    inner.flush()
+    assert len(backend) == 0                  # still buffered in outer
+    outer.flush()
+    assert backend.stats.put_batches == 1     # ONE real store round-trip
+    assert backend.get_many(cids) == raws
+    # closed buffers are transparent: writes land directly in the store
+    extra = inner.put(encode_chunk(3, rng.bytes(50)))
+    assert backend.has(extra)
+
+
+@pytest.mark.parametrize("backend", ["lru"], indirect=True)
+def test_lru_serves_repeat_reads_from_cache(backend, rng):
+    cids = backend.put_many(chunks(rng, n=8))
+    backend.inner.stats.gets = 0
+    backend.get_many(cids)
+    backend.get_many(cids)
+    assert backend.inner.stats.gets == 0      # write-through populated it
+    assert backend.stats.cache_hits == 16
+
+
+@pytest.mark.parametrize("backend", ["replicated"], indirect=True)
+def test_replicated_reads_stay_batched(backend, rng):
+    """get_many groups by primary replica: O(replicas) inner batches,
+    not one batch-of-one per cid."""
+    raws = chunks(rng, n=30)
+    cids = backend.put_many(raws)
+    g0 = sum(s.stats.get_batches for s in backend.stores)
+    assert backend.get_many(cids) == raws
+    assert sum(s.stats.get_batches for s in backend.stores) - g0 <= \
+        len(backend.stores)
+
+
+@pytest.mark.parametrize("backend", ["replicated"], indirect=True)
+def test_replication_factor_and_failover(backend, rng):
+    raw = encode_chunk(3, rng.bytes(1500))
+    cid = backend.put(raw)
+    assert sum(1 for s in backend.stores if s.has(cid)) == backend.k
+    for s in backend.stores:                  # kill the primary replica
+        if s.has(cid):
+            del s._data[cid]
+            break
+    assert backend.get(cid) == raw            # failover to the other copy
+    with pytest.raises(ChunkMissing):
+        backend.get_many([bytes(32)])
+
+
+@pytest.mark.parametrize("backend", ["sharded"], indirect=True)
+def test_sharding_spreads_chunks(backend, rng):
+    backend.put_many(chunks(rng, n=200))
+    dist = [len(s) for s in backend.shards]
+    assert sum(dist) == 200
+    assert min(dist) > 0                      # cid hash spreads uniformly
+
+
+@pytest.mark.parametrize("backend", ["memory"], indirect=True)
+def test_make_backend_specs(backend, tmp_path, rng):
+    for spec, kw in [("memory", {}), ("lru+memory", {}),
+                     ("lru+sharded", {"shards": 2}),
+                     ("replicated", {"n": 3, "k": 2}),
+                     ("log", {"log_path": str(tmp_path / "l.log")})]:
+        b = make_backend(spec, **kw)
+        raw = encode_chunk(3, rng.bytes(128))
+        assert b.get(b.put(raw)) == raw
+    with pytest.raises(ValueError):
+        make_backend("bogus")
+
+
+@pytest.mark.parametrize("backend", ["memory"], indirect=True)
+def test_fphash_many_matches_per_chunk_kernel(backend, rng):
+    from repro.kernels.fphash import fphash, fphash_many
+    blobs = [rng.bytes(n) for n in (0, 1, 300, 4096, 4097, 9000)]
+    assert fphash_many(blobs) == [fphash(b) for b in blobs]
+
+
+@pytest.mark.parametrize("backend", ["memory"], indirect=True)
+def test_fphash_dispatch_roundtrip(backend, rng):
+    """use_fphash(): cids route through the batched Pallas kernel; the
+    engine works identically (one launch per value commit)."""
+    from repro.core import hashing
+    hashing.use_fphash()
+    try:
+        db = ForkBase(backend)
+        data = rng.bytes(50_000)
+        db.put("k", FBlob(data))
+        assert db.get("k").blob().read() == data
+        assert backend.stats.put_batches == 1
+    finally:
+        hashing.use_sha256()

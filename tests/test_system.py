@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # ~minutes of model/train work
+
 from repro.apps import ForkBaseLedger
 from repro.ckpt import CheckpointStore
 from repro.configs import ARCHS, smoke
