@@ -1,0 +1,111 @@
+"""GC & space-reclamation benchmark -> BENCH_gc.json.
+
+Three workloads:
+  * versioned blobs: N versions on two branches, drop one branch ->
+    mark throughput (chunks/s over the live DAG) and sweep reclaim;
+  * log compaction: same store on a log file -> on-disk size
+    before/after compact_log;
+  * ckpt retention: a simulated training run (small pytree, many steps),
+    prune to keep_last + keep_every -> bytes reclaimed vs bytes kept.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import FBlob, ForkBase
+from repro.gc import GarbageCollector
+from repro.storage import MemoryBackend
+
+from .common import emit
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_gc.json")
+
+
+def _versioned_workload(db, rng, versions=12, size=120_000):
+    data = bytearray(rng.bytes(size))
+    db.put("k", FBlob(bytes(data)))
+    db.fork("k", "master", "scratch")
+    for i in range(versions):
+        off = int(rng.integers(0, size - 256))
+        data[off:off + 256] = rng.bytes(256)
+        db.put("k", FBlob(bytes(data)), "scratch" if i % 2 else "master")
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    out = {}
+
+    # ---- mark + sweep over a two-branch version DAG ----
+    db = ForkBase(MemoryBackend())
+    _versioned_workload(db, rng)
+    phys0 = db.store.stats.physical_bytes
+    chunks0 = len(db.store)
+    gc = GarbageCollector(db.store, branches=db.branches, pins=db.pins)
+    t0 = time.perf_counter()
+    live, rounds, _ = gc.mark()
+    mark_s = time.perf_counter() - t0
+    db.remove("k", "scratch")
+    t0 = time.perf_counter()
+    report = db.gc()
+    collect_s = time.perf_counter() - t0
+    out["store_chunks_before"] = chunks0
+    out["store_chunks_after"] = len(db.store)
+    out["mark_chunks_per_s"] = len(live) / max(mark_s, 1e-9)
+    out["mark_rounds"] = rounds
+    out["swept_chunks"] = report.swept_chunks
+    out["reclaimed_bytes"] = report.reclaimed_bytes
+    out["physical_bytes_before"] = phys0
+    out["physical_bytes_after"] = db.store.stats.physical_bytes
+    emit("gc_mark", mark_s / max(len(live), 1) * 1e6,
+         f"{out['mark_chunks_per_s']:.0f} chunks/s")
+    emit("gc_collect", collect_s * 1e6,
+         f"swept {report.swept_chunks} ({report.reclaimed_bytes} B)")
+
+    # ---- log compaction ----
+    with tempfile.TemporaryDirectory() as tmp:
+        log = os.path.join(tmp, "chunks.log")
+        dbl = ForkBase(MemoryBackend(log_path=log))
+        _versioned_workload(dbl, rng)
+        dbl.remove("k", "scratch")
+        dbl.gc()
+        t0 = time.perf_counter()
+        before, after = dbl.store.compact_log()
+        compact_s = time.perf_counter() - t0
+        out["log_bytes_before_compact"] = before
+        out["log_bytes_after_compact"] = after
+        emit("gc_compact_log", compact_s * 1e6,
+             f"{before} -> {after} B")
+
+    # ---- checkpoint retention across a simulated training run ----
+    from repro.ckpt.store import CheckpointStore
+    cs = CheckpointStore(ForkBase(MemoryBackend()))
+    state = {"w": rng.normal(size=(128, 128)).astype("float32"),
+             "m": rng.normal(size=(128, 128)).astype("float32")}
+    for step in range(16):
+        state = {k: v + 0.01 * rng.normal(size=v.shape).astype(v.dtype)
+                 for k, v in state.items()}
+        cs.save(state, "run", step=step)
+    ckpt_phys = cs.db.store.stats.physical_bytes
+    t0 = time.perf_counter()
+    kept, rep = cs.prune("run", keep_last=2, keep_every=8)
+    prune_s = time.perf_counter() - t0
+    out["ckpt_steps"] = 16
+    out["ckpt_kept"] = len(kept)
+    out["ckpt_bytes_before_prune"] = ckpt_phys
+    out["ckpt_bytes_after_prune"] = cs.db.store.stats.physical_bytes
+    out["ckpt_reclaimed_bytes"] = rep.reclaimed_bytes
+    emit("ckpt_prune", prune_s * 1e6,
+         f"16 -> {len(kept)} ckpts, {rep.reclaimed_bytes} B reclaimed")
+
+    with open(BENCH_JSON, "w") as f:
+        json.dump(out, f, indent=2)
+
+
+if __name__ == "__main__":
+    run()

@@ -9,9 +9,9 @@ import os
 import sys
 import time
 
-MODULES = ["micro_ops", "put_breakdown", "scalability", "blockchain_ops",
-           "merkle_trees", "scan_queries", "wiki_bench", "analytics_bench",
-           "ckpt_dedup"]
+MODULES = ["micro_ops", "put_breakdown", "gc_bench", "scalability",
+           "blockchain_ops", "merkle_trees", "scan_queries", "wiki_bench",
+           "analytics_bench", "ckpt_dedup"]
 
 
 def main() -> None:
@@ -25,6 +25,16 @@ def main() -> None:
         m = __import__(f"benchmarks.{mod}", fromlist=["run"])
         m.run()
         print(f"# --- {mod} done in {time.time() - t0:.1f}s", flush=True)
+    if "gc_bench" in only:
+        from .gc_bench import BENCH_JSON as GC_JSON
+        if os.path.exists(GC_JSON):
+            g = json.load(open(GC_JSON))
+            print(f"# gc: mark {g['mark_chunks_per_s']:.0f} chunks/s, "
+                  f"swept {g['swept_chunks']} "
+                  f"({g['reclaimed_bytes']} B); log "
+                  f"{g['log_bytes_before_compact']} -> "
+                  f"{g['log_bytes_after_compact']} B; ckpt prune "
+                  f"reclaimed {g['ckpt_reclaimed_bytes']} B")
     if "put_breakdown" in only:
         from .put_breakdown import BENCH_JSON
         if os.path.exists(BENCH_JSON):

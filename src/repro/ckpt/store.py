@@ -39,10 +39,33 @@ def _leaf_paths(tree):
     return out, treedef
 
 
+def manifest_refs(raw: bytes) -> list[bytes]:
+    """GC link extractor for checkpoint manifests: a manifest is an FMap
+    whose values are JSON ``{"cid": <hex tensor-tree root>, ...}`` — an
+    application-level reference the chunk format can't expose.  This hook
+    (gc.mark ``ref_hooks``) surfaces those roots so the mark phase walks
+    the tensor trees of every live manifest.  Non-JSON / cid-less values
+    are skipped; gc validates extracted refs before following them."""
+    if ck.chunk_type(raw) != ck.MAP:
+        return []
+    refs = []
+    for _, v in ck.unpack_kv_stream(ck.chunk_payload(raw)):
+        try:
+            meta = json.loads(v)
+            cid = bytes.fromhex(meta["cid"])
+        except (ValueError, KeyError, TypeError, UnicodeDecodeError):
+            continue
+        if len(cid) == 32:
+            refs.append(cid)
+    return refs
+
+
 class CheckpointStore:
     def __init__(self, db: ForkBase | None = None, key: str = "ckpt"):
         self.db = db if db is not None else ForkBase()
         self.key = key
+        if manifest_refs not in self.db.gc_hooks:
+            self.db.gc_hooks.append(manifest_refs)
 
     # ------------------------------------------------------------- save
     def save(self, state, branch: str, *, step: int,
@@ -129,6 +152,77 @@ class CheckpointStore:
     def fork(self, ref: str | bytes, new_branch: str) -> None:
         """Experiment fork (warm restart from any historical version)."""
         self.db.fork(self.key, ref, new_branch)
+
+    # -------------------------------------------------------- retention
+    def prune(self, branch: str, *, keep_last: int = 1,
+              keep_every: int | None = None, collect: bool = True):
+        """Retention policy over a training run: keep the newest
+        ``keep_last`` checkpoints plus every ``keep_every``-th step,
+        rewrite the branch's manifest chain to exactly those versions
+        (``ForkBase.truncate_history``) and — unless ``collect=False`` —
+        run GC so the retired manifests and any tensor chunks only they
+        referenced are reclaimed.  Tensor chunks shared with surviving
+        checkpoints (the dedup win) stay, of course.
+
+        The kept versions get new uids (their ``bases`` are relinked);
+        returns (kept uids newest-first, GCReport | None).  History
+        shared with another branch is never rewritten: the walk stops at
+        the first version some other head can reach and the rewritten
+        chain is *anchored* on it, so forks keep their full lineage and
+        ``lca``/``merge`` across related runs still find the common
+        ancestor.  Pinned uids (``hold``) survive regardless of the
+        policy."""
+        head = self.db.get(self.key, branch)
+        if head is None:
+            from ..core import NoSuchRef
+            raise NoSuchRef(branch)
+        chain = self.db.track(self.key, branch)   # newest first
+        head_uid = head.uid
+        tagged = self.db.list_tagged_branches(self.key)
+        # heads of every OTHER branch (by name: a twin tag sharing our
+        # head uid still protects it) + untagged racing heads
+        other_heads = {u for b, u in tagged.items() if b != branch}
+        other_heads |= (set(self.db.list_untagged_branches(self.key))
+                        - {head_uid})
+        external = self._reachable_versions(other_heads)
+        keep: list[bytes] = []
+        anchor: bytes | None = None
+        for i, obj in enumerate(chain):
+            if obj.uid in external:               # shared lineage: stop
+                anchor = obj.uid
+                break
+            step = json.loads(obj.context or b"{}").get("step", -1)
+            if i < keep_last or (keep_every is not None and step >= 0
+                                 and step % keep_every == 0):
+                keep.append(obj.uid)
+        if keep:
+            mapping = self.db.truncate_history(self.key, branch, keep,
+                                               base_uid=anchor)
+            kept = [mapping[u] for u in keep]
+        else:
+            kept = []                             # head itself is shared
+        return kept, (self.db.gc() if collect else None)
+
+    def _reachable_versions(self, heads) -> set[bytes]:
+        """Meta-level reachability (bases chains only) from ``heads`` —
+        batched like gc.mark: one get_many per DAG level."""
+        from ..core.fobject import FObject
+        seen: set[bytes] = set(heads)
+        frontier = list(seen)
+        while frontier:
+            nxt: list[bytes] = []
+            for raw in self.db.store.get_many(frontier):
+                for b in FObject.deserialize(raw, b"").bases:
+                    if b not in seen:
+                        seen.add(b)
+                        nxt.append(b)
+            frontier = nxt
+        return seen
+
+    def hold(self, *uids: bytes):
+        """Retention hold (context manager): pin checkpoint versions an
+        external consumer still reads, shielding them from prune+gc."""
+        return self.db.pins.hold(*uids)
 
     def verify(self, uid: bytes, ancestor: bytes) -> bool:
         """Tamper-evident lineage check: does `uid` derive from

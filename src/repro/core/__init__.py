@@ -10,7 +10,7 @@ Public surface:
                               repro.storage.MemoryBackend; every store
                               implements storage.StorageBackend, batched)
 """
-from .branch import DEFAULT_BRANCH, GuardFailed
+from .branch import (DEFAULT_BRANCH, BranchExists, GuardFailed, NoSuchRef)
 from .chunker import ChunkParams, DEFAULT_PARAMS
 from .chunkstore import ChunkStore, ReplicatedStore
 from .cluster import Cluster
@@ -20,15 +20,16 @@ from .merge import (BUILTIN_RESOLVERS, Conflict, MergeConflict,
                     aggregate_resolver, append_resolver, choose_one, lca)
 from .postree import POSTree
 from .types import FBlob, FInt, FList, FMap, FSet, FString, FTuple
-from ..storage import (ChunkMissing, StorageBackend, WriteBuffer,
-                       make_backend)
+from ..storage import (ChunkMissing, StorageBackend, TamperedChunk,
+                       WriteBuffer, make_backend)
 
 __all__ = [
     "ForkBase", "Cluster", "ChunkStore", "ReplicatedStore", "POSTree",
     "FBlob", "FList", "FMap", "FSet", "FString", "FTuple", "FInt",
     "FObject", "ChunkParams", "DEFAULT_PARAMS", "DEFAULT_BRANCH",
-    "GuardFailed", "TypeNotMatch", "ValueHandle", "MergeConflict",
-    "Conflict", "BUILTIN_RESOLVERS", "choose_one", "append_resolver",
-    "aggregate_resolver", "lca", "load_fobject", "make_fobject",
-    "StorageBackend", "ChunkMissing", "WriteBuffer", "make_backend",
+    "GuardFailed", "BranchExists", "NoSuchRef", "TypeNotMatch",
+    "ValueHandle", "MergeConflict", "Conflict", "BUILTIN_RESOLVERS",
+    "choose_one", "append_resolver", "aggregate_resolver", "lca",
+    "load_fobject", "make_fobject", "StorageBackend", "ChunkMissing",
+    "TamperedChunk", "WriteBuffer", "make_backend",
 ]

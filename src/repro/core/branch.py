@@ -12,10 +12,33 @@ class GuardFailed(Exception):
     """Guarded Put failed: current head != guard_uid (paper §4.5.1)."""
 
 
+class BranchExists(ValueError):
+    """Fork/rename target branch name is already taken for this key."""
+
+    def __init__(self, branch: str):
+        super().__init__(branch)
+        self.branch = branch
+
+    def __str__(self) -> str:
+        return f"branch exists: {self.branch}"
+
+
+class NoSuchRef(KeyError):
+    """A named branch or version uid does not resolve."""
+
+    def __init__(self, ref):
+        super().__init__(ref)
+        self.ref = ref
+
+    def __str__(self) -> str:
+        return f"no such ref: {self.ref!r}"
+
+
 @dataclass
 class KeyBranches:
     tb: dict[str, bytes] = field(default_factory=dict)   # tag -> head uid
     ub: set[bytes] = field(default_factory=set)          # DAG leaf uids
+    foc: set[bytes] = field(default_factory=set)  # genuine FoC racing heads
 
 
 class BranchTable:
@@ -35,13 +58,21 @@ class BranchTable:
 
     # ---- update rules (§4.5.1) ----
     def on_new_version(self, key: bytes, uid: bytes,
-                       bases: tuple[bytes, ...]) -> None:
+                       bases: tuple[bytes, ...], *,
+                       foc: bool = False) -> None:
         """UB-table: add the new head, retire its bases.  A base not present
-        means it was already derived -> implicit fork (FoC) keeps both."""
+        means it was already derived -> implicit fork (FoC) keeps both.
+        ``foc=True`` marks the head as a *genuine* fork-on-conflict head
+        (created against an explicit base version, or by merging untagged
+        heads): such heads are live in their own right, independent of
+        any tag that may later alias them — remove() consults this."""
         kb = self.of(key)
         for b in bases:
             kb.ub.discard(b)
+            kb.foc.discard(b)       # derived from -> no longer a leaf
         kb.ub.add(uid)
+        if foc:
+            kb.foc.add(uid)
 
     def set_head(self, key: bytes, branch: str, uid: bytes,
                  guard: bytes | None = None) -> None:
@@ -55,19 +86,41 @@ class BranchTable:
 
     def fork(self, key: bytes, new_branch: str, uid: bytes) -> None:
         kb = self.of(key)
-        assert new_branch not in kb.tb, f"branch exists: {new_branch}"
+        if new_branch in kb.tb:
+            raise BranchExists(new_branch)
         kb.tb[new_branch] = uid
 
     def rename(self, key: bytes, old: str, new: str) -> None:
         kb = self.of(key)
-        assert new not in kb.tb, f"branch exists: {new}"
+        if new in kb.tb:
+            raise BranchExists(new)
+        if old not in kb.tb:
+            raise NoSuchRef(old)
         kb.tb[new] = kb.tb.pop(old)
 
     def remove(self, key: bytes, branch: str) -> None:
-        self.of(key).tb.pop(branch, None)
+        """Drop the tagged branch; its head also leaves the UB table, so
+        the detached line of development becomes collectable by GC —
+        UNLESS the head is live independently of this tag: another tag
+        still points at it, or it is a genuine fork-on-conflict racing
+        head (``foc``), which a tag only ever *aliased* — removing the
+        alias restores the pre-tag state regardless of removal order."""
+        kb = self.of(key)
+        uid = kb.tb.pop(branch, None)
+        if (uid is not None and uid not in kb.foc
+                and uid not in kb.tb.values()):
+            kb.ub.discard(uid)
 
     def tagged(self, key: bytes) -> dict[str, bytes]:
         return dict(self.of(key).tb)
 
     def untagged(self, key: bytes) -> list[bytes]:
         return sorted(self.of(key).ub)
+
+    def all_heads(self) -> set[bytes]:
+        """Every live head across all keys — the GC root set (TB + UB)."""
+        out: set[bytes] = set()
+        for kb in self._keys.values():
+            out.update(kb.tb.values())
+            out.update(kb.ub)
+        return out

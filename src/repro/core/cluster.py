@@ -37,6 +37,31 @@ class NodeStats:
     build_work: int = 0      # POS-Tree construction work units (bytes)
 
 
+def _delete_on_node(cluster: "Cluster", ni: int, cids,
+                    stats=None) -> tuple[int, int]:
+    """One node's share of a sweep: delete the chunks, debit the node's
+    placement counters, drop master-index entries.  ``stats`` (optional,
+    a routing store's) absorbs the delete/reclaim counters but is NEVER
+    debited physical bytes: routing stats count what that servlet wrote,
+    and the deleted chunk's writer is unknown, so a debit would skew the
+    caller negative (physical truth lives in the node stores).  Returns
+    (removed chunks, freed bytes)."""
+    nd = cluster.nodes[ni]
+    d0 = nd.store.stats.deletes
+    r0 = nd.store.stats.reclaimed_bytes
+    nd.store.delete_many(cids)
+    removed = nd.store.stats.deletes - d0
+    freed = nd.store.stats.reclaimed_bytes - r0
+    if stats is not None:
+        stats.deletes += removed
+        stats.reclaimed_bytes += freed
+    nd.stats.chunks -= removed
+    nd.stats.chunk_bytes -= freed
+    for cid in cids:            # absent on the owner either way now
+        cluster.index.pop(cid, None)
+    return removed, freed
+
+
 class _RoutingStore(BackendBase):
     """StorageBackend a servlet writes through: meta chunks pinned locally,
     data chunks placed by cid hash across the pool (2LP) or locally (1LP).
@@ -104,6 +129,17 @@ class _RoutingStore(BackendBase):
                 out[i] = p
         return out
 
+    def delete_many(self, cids) -> int:
+        """Sweep fan-out by owning node; the master index and per-node
+        placement counters shrink with the deleted chunks."""
+        n = 0
+        for node, (_, cs, _) in group_by(self._location, cids).items():
+            n += _delete_on_node(self.cluster, node, cs, self.stats)[0]
+        return n
+
+    def iter_cids(self):
+        return iter(list(self.cluster.index))
+
     def __len__(self) -> int:
         return len(self.cluster.index)
 
@@ -159,6 +195,50 @@ class Cluster:
 
     def track(self, key, ref, dist_rng=(0, 1 << 30)):
         return self.servlet_of(key).track(key, ref, dist_rng)
+
+    def remove(self, key, branch):
+        return self.servlet_of(key).remove(key, branch)
+
+    # ---- garbage collection (cluster-wide) ----
+    def gc(self, pins=None, extra_roots=(), extra_hooks=()):
+        """Cluster mark-and-sweep: the dispatcher unions every servlet's
+        TB/UB heads (plus servlet pin sets, optional extra ``pins``, and
+        any caller-supplied ``extra_roots``/``extra_hooks`` — e.g. an
+        external ForkBase sharing a routing store) into one global root
+        set, marks through the routing store — reads fan out to owning
+        nodes via the master index, one batch per node per BFS level —
+        then sweeps each node's *own* chunk store and the master index.
+        The sweep deliberately bypasses the per-servlet routing-store
+        stats: those count what each servlet wrote, and a chunk's writer
+        is not recorded, so debiting any one servlet would skew its
+        counters; physical reclamation shows up in the node stores'
+        stats and the per-node placement counters."""
+        from ..gc import GCReport, GarbageCollector
+        roots: set[bytes] = set(extra_roots)
+        hooks: list = list(extra_hooks)
+        for node in self.nodes:
+            roots |= node.servlet.branches.all_heads()
+            roots |= node.servlet.pins.uids()
+            hooks.extend(h for h in node.servlet.gc_hooks
+                         if h not in hooks)
+        if pins is not None:
+            roots |= pins.uids()
+        gc = GarbageCollector(self.nodes[0].servlet.store,
+                              extra_roots=roots, ref_hooks=hooks)
+        live, rounds, missing = gc.mark()
+        by_node: dict[int, list[bytes]] = {}
+        for cid, node in self.index.items():
+            if cid not in live:
+                by_node.setdefault(node, []).append(cid)
+        swept = reclaimed = 0
+        for ni, cs in by_node.items():
+            n, freed = _delete_on_node(self, ni, sorted(cs))
+            swept += n
+            reclaimed += freed
+            self.nodes[ni].store.flush()  # durable tombstones if logged
+        return GCReport(roots=len(roots), live_chunks=len(live),
+                        swept_chunks=swept, reclaimed_bytes=reclaimed,
+                        mark_rounds=rounds, missing_roots=missing)
 
     # ---- §4.6.1 construction rebalancing ----
     def _build_servlet_for(self, key, value) -> ForkBase:

@@ -14,7 +14,8 @@ from typing import Iterable
 
 from . import chunk as ck
 from . import merge as mg
-from .branch import DEFAULT_BRANCH, BranchTable, GuardFailed
+from .branch import (DEFAULT_BRANCH, BranchExists, BranchTable, GuardFailed,
+                     NoSuchRef)
 from .chunker import ChunkParams, DEFAULT_PARAMS
 from .chunkstore import ChunkStore
 from ..storage import StorageBackend, WriteBuffer
@@ -92,6 +93,14 @@ class ForkBase:
         self.store = store if store is not None else ChunkStore()
         self.params = params
         self.branches = BranchTable()
+        # explicit GC roots: in-flight readers / retention holds pin the
+        # uids they need across a concurrent collect()
+        from ..gc.pins import PinSet
+        self.pins = PinSet()
+        # application-level link extractors (gc.mark ref_hooks): layers
+        # that embed cids inside opaque values (ckpt manifests) register
+        # here so gc() can trace through them
+        self.gc_hooks: list = []
 
     # ------------------------------------------------------------- put
     def _commit_value(self, value, store=None) -> tuple[int, bytes]:
@@ -132,7 +141,8 @@ class ForkBase:
         obj = make_fobject(batch, t, key, data, bases, context,
                            base_depth)
         batch.flush()
-        self.branches.on_new_version(key, obj.uid, bases)
+        self.branches.on_new_version(key, obj.uid, bases,
+                                     foc=base_uid is not None)
         if base_uid is None:
             self.branches.set_head(key, branch, obj.uid)
         return obj.uid
@@ -163,8 +173,10 @@ class ForkBase:
         """M11 (from branch) / M12 (from uid)."""
         key = _k(key)
         uid = (self.branches.head(key, ref) if isinstance(ref, str)
-               else ref)
-        assert uid is not None, f"no such ref: {ref!r}"
+               else bytes(ref))
+        if uid is None or (not isinstance(ref, str)
+                           and not self.store.has(uid)):
+            raise NoSuchRef(ref)   # a dangling tag would poison GC roots
         self.branches.fork(key, new_branch, uid)
 
     def rename(self, key: bytes, old: str, new: str) -> None:   # M13
@@ -172,6 +184,72 @@ class ForkBase:
 
     def remove(self, key: bytes, branch: str) -> None:          # M14
         self.branches.remove(_k(key), branch)
+
+    # ---------------------------------------------------- space reclaim
+    def gc(self, *, extra_roots: Iterable[bytes] = ()):
+        """Mark-and-sweep: everything reachable from the TB/UB heads of
+        every key (plus ``self.pins`` and ``extra_roots``) survives; the
+        rest is removed via the backend's ``delete_many``.  Returns a
+        ``gc.GCReport``.
+
+        When the store is a cluster routing store, its sweep inventory
+        spans the WHOLE cluster — so the collection must be the
+        cluster's: this delegates to ``Cluster.gc`` (contributing this
+        engine's own heads, pins and hooks), which unions every
+        servlet's roots and sweeps each node's store directly.  A
+        single-servlet ``gc()`` is therefore exactly as safe as
+        ``Cluster.gc()``, and no servlet's write-side routing counters
+        are skewed by deleting chunks another servlet wrote."""
+        from ..gc import GarbageCollector
+        cluster = getattr(self.store, "cluster", None)
+        if cluster is not None:
+            roots = (set(extra_roots) | self.branches.all_heads()
+                     | self.pins.uids())
+            return cluster.gc(extra_roots=roots,
+                              extra_hooks=self.gc_hooks)
+        return GarbageCollector(self.store, branches=self.branches,
+                                pins=self.pins, extra_roots=extra_roots,
+                                ref_hooks=self.gc_hooks).collect()
+
+    def truncate_history(self, key: bytes, branch: str,
+                         keep_uids: "list[bytes]",
+                         base_uid: bytes | None = None
+                         ) -> dict[bytes, bytes]:
+        """Destructive retention primitive: rewrite ``branch``'s version
+        chain to exactly ``keep_uids`` (newest first, as returned by
+        ``track``), relinking each kept version's ``bases`` to the
+        previous kept one; the oldest links to ``base_uid`` if given
+        (the anchor: an untouched ancestor, e.g. history shared with
+        another branch) and otherwise becomes a root.  Kept versions get
+        new uids (the meta chunk changes; hash-chain tamper evidence is
+        preserved over the *retained* chain); retired versions become
+        unreachable, so the next ``gc()`` sweeps them.  The rewritten
+        chain is linear — merge second-parents above the anchor are
+        dropped, which is what makes their subtrees collectable.
+        Returns {old uid: new uid}."""
+        key = _k(key)
+        if not keep_uids:
+            raise NoSuchRef(branch)
+        old_head = self.branches.head(key, branch)
+        if old_head is None:
+            raise NoSuchRef(branch)
+        mapping: dict[bytes, bytes] = {}
+        prev = base_uid
+        base_depth = (load_fobject(self.store, base_uid).depth
+                      if base_uid is not None else -1)
+        batch = WriteBuffer(self.store)
+        for uid in reversed(keep_uids):
+            obj = load_fobject(self.store, uid)
+            bases = (prev,) if prev is not None else ()
+            new = make_fobject(batch, obj.type, obj.key, obj.data, bases,
+                               obj.context, base_depth)
+            mapping[uid] = new.uid
+            prev = new.uid
+            base_depth += 1
+        batch.flush()
+        self.branches.on_new_version(key, prev, (old_head,))
+        self.branches.set_head(key, branch, prev)
+        return mapping
 
     # ----------------------------------------------------------- track
     def track(self, key: bytes, ref: str | bytes,
@@ -219,23 +297,29 @@ class ForkBase:
         key = _k(key)
         if isinstance(target, str):          # M5 / M6
             tgt_uid = self.branches.head(key, target)
-            assert tgt_uid is not None
+            if tgt_uid is None:
+                raise NoSuchRef(target)
             ref = refs[0]
             ref_uid = (self.branches.head(key, ref) if isinstance(ref, str)
                        else ref)
+            if ref_uid is None:
+                raise NoSuchRef(ref)
             merged_uid = self._merge_versions(key, tgt_uid, ref_uid,
                                               resolver, context)
             self.branches.set_head(key, target, merged_uid)
             return merged_uid
-        # M7: merge a collection of untagged heads pairwise
+        # M7: merge a collection of untagged heads pairwise; the result
+        # is itself an untagged (FoC) head until something tags it
         uids = [target, *refs]
         acc = uids[0]
         for u in uids[1:]:
-            acc = self._merge_versions(key, acc, u, resolver, context)
+            acc = self._merge_versions(key, acc, u, resolver, context,
+                                       foc=True)
         return acc
 
     def _merge_versions(self, key: bytes, uid1: bytes, uid2: bytes,
-                        resolver, context: bytes) -> bytes:
+                        resolver, context: bytes, *,
+                        foc: bool = False) -> bytes:
         o1 = load_fobject(self.store, uid1)
         o2 = load_fobject(self.store, uid2)
         if o1.type != o2.type:
@@ -278,7 +362,7 @@ class ForkBase:
         depth = max(o1.depth, o2.depth)
         obj = make_fobject(self.store, t, key, data, (uid1, uid2), context,
                            depth)
-        self.branches.on_new_version(key, obj.uid, (uid1, uid2))
+        self.branches.on_new_version(key, obj.uid, (uid1, uid2), foc=foc)
         return obj.uid
 
     # ----------------------------------------------------- verification

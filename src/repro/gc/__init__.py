@@ -1,0 +1,15 @@
+"""Chunk garbage collection & space reclamation.
+
+  GarbageCollector  reachability mark-and-sweep over the version DAG
+  GCReport          what one collection did (roots/live/swept/bytes)
+  PinSet            explicit roots: in-flight readers, retention holds
+
+Entry points: ``ForkBase.gc()`` (embedded engine), ``Cluster.gc()``
+(global root set at the dispatcher, per-node sweep),
+``CheckpointStore.prune`` (retention policy that drives collection),
+``MemoryBackend.compact_log`` (on-disk reclamation).
+"""
+from .collector import GarbageCollector, GCReport, chunk_refs, mark
+from .pins import PinSet
+
+__all__ = ["GarbageCollector", "GCReport", "PinSet", "chunk_refs", "mark"]

@@ -24,7 +24,7 @@ Select or stack backends with ``make_backend``:
 from __future__ import annotations
 
 from .backend import (BackendBase, ChunkMissing, StorageBackend, StoreStats,
-                      resolve_cids)
+                      TamperedChunk, resolve_cids)
 from .buffer import WriteBuffer
 from .cache import LRUCacheBackend
 from .memory import MemoryBackend
@@ -33,8 +33,9 @@ from .sharded import ShardedBackend
 
 __all__ = [
     "StorageBackend", "BackendBase", "StoreStats", "ChunkMissing",
-    "MemoryBackend", "LRUCacheBackend", "ReplicatedBackend",
-    "ShardedBackend", "WriteBuffer", "make_backend", "resolve_cids",
+    "TamperedChunk", "MemoryBackend", "LRUCacheBackend",
+    "ReplicatedBackend", "ShardedBackend", "WriteBuffer", "make_backend",
+    "resolve_cids",
 ]
 
 
@@ -51,7 +52,8 @@ def make_backend(spec: str = "memory", *, log_path: str | None = None,
     if base == "memory":
         backend = MemoryBackend(verify=verify)
     elif base == "log":
-        assert log_path, "log backend needs log_path"
+        if not log_path:       # must survive -O: silent memory fallback
+            raise ValueError("log backend needs log_path")
         backend = MemoryBackend(log_path=log_path, verify=verify)
     elif base == "sharded":
         backend = ShardedBackend(shards)

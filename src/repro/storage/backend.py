@@ -17,7 +17,7 @@ batches of one.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Protocol, Sequence, runtime_checkable
+from typing import Iterator, Protocol, Sequence, runtime_checkable
 
 
 class ChunkMissing(KeyError):
@@ -31,6 +31,20 @@ class ChunkMissing(KeyError):
         return f"chunk not found: {self.cid.hex()[:16]}"
 
 
+class TamperedChunk(ValueError):
+    """Chunk bytes do not hash to their cid: on-disk or in-flight
+    corruption / tampering (the content-addressing invariant is broken)."""
+
+    def __init__(self, cid: bytes, where: str = ""):
+        super().__init__(cid)
+        self.cid = cid
+        self.where = where
+
+    def __str__(self) -> str:
+        at = f" during {self.where}" if self.where else ""
+        return f"tampered chunk{at}: {self.cid.hex()[:16]}"
+
+
 @dataclass
 class StoreStats:
     puts: int = 0                 # Put-Chunk requests (per chunk)
@@ -39,8 +53,10 @@ class StoreStats:
     gets: int = 0                 # Get-Chunk requests (per chunk)
     get_batches: int = 0          # get_many calls
     cache_hits: int = 0           # reads served by a cache layer
+    deletes: int = 0              # chunks actually removed (per chunk)
     logical_bytes: int = 0        # sum of bytes across all Puts
     physical_bytes: int = 0       # bytes actually stored (post-dedup)
+    reclaimed_bytes: int = 0      # physical bytes freed by deletes
 
     @property
     def dedup_ratio(self) -> float:
@@ -51,7 +67,11 @@ class StoreStats:
 class StorageBackend(Protocol):
     """What every chunk store implements.  Content-addressed, immutable
     chunks; dedup on Put (existing cids are acknowledged, not rewritten);
-    missing reads raise ChunkMissing."""
+    missing reads raise ChunkMissing.  ``delete_many`` is the GC sweep
+    verb: it removes chunks everywhere they are materialized (every
+    replica, the owning shard, cache entries) and is a no-op for absent
+    cids; ``iter_cids`` enumerates the distinct stored cids (the sweep
+    inventory)."""
 
     stats: StoreStats
 
@@ -65,6 +85,12 @@ class StorageBackend(Protocol):
     def has_many(self, cids: Sequence[bytes]) -> list[bool]:
         ...
 
+    def delete_many(self, cids: Sequence[bytes]) -> int:
+        ...
+
+    def iter_cids(self) -> "Iterator[bytes]":
+        ...
+
     def put(self, raw: bytes, cid: bytes | None = None) -> bytes:
         ...
 
@@ -72,6 +98,9 @@ class StorageBackend(Protocol):
         ...
 
     def has(self, cid: bytes) -> bool:
+        ...
+
+    def delete(self, cid: bytes) -> int:
         ...
 
     def __len__(self) -> int:
@@ -151,6 +180,22 @@ def overlay_has_many(local: dict, cids: Sequence[bytes],
     return [hit or next(rest) for hit in in_local]
 
 
+def delete_via(stats: StoreStats, child, cids: Sequence[bytes], *,
+               count_deletes: bool = True) -> int:
+    """Forward one group of deletes to a child backend and absorb its
+    reclaimed-bytes delta into ``stats`` (the sweep-side twin of
+    ``put_via``).  Returns the child's removed-chunk count."""
+    d0 = child.stats.deletes
+    r0 = child.stats.reclaimed_bytes
+    n = child.delete_many(cids)
+    freed = child.stats.reclaimed_bytes - r0
+    if count_deletes:
+        stats.deletes += child.stats.deletes - d0
+    stats.physical_bytes -= freed
+    stats.reclaimed_bytes += freed
+    return n
+
+
 def put_via(stats: StoreStats, child, raws: Sequence[bytes],
             cids: Sequence[bytes | None] | None, *,
             count_dedup: bool = True) -> tuple[list[bytes], int, int]:
@@ -184,7 +229,11 @@ class BackendBase:
     def has(self, cid: bytes) -> bool:
         return self.has_many([cid])[0]
 
+    def delete(self, cid: bytes) -> int:
+        return self.delete_many([cid])
+
     def flush(self) -> None:
         pass
 
-    # subclasses implement put_many / get_many / has_many / __len__
+    # subclasses implement put_many / get_many / has_many / delete_many /
+    # iter_cids / __len__

@@ -65,6 +65,40 @@ class WriteBuffer(BackendBase):
             return self.inner.has_many(cids)
         return overlay_has_many(self._pending, cids, self.inner.has_many)
 
+    def delete_many(self, cids) -> int:
+        """Open buffer: retract matching pending chunks (they will never
+        reach the inner store) and pass the delete through; closed buffer:
+        transparent pass-through.  A cid pending here AND already stored
+        inner (dedup re-put) is one logical chunk — counted once."""
+        if self._closed:
+            return self.inner.delete_many(cids)
+        cids = list(dict.fromkeys(cids))
+        in_inner = self.inner.has_many(cids)
+        drop = {cid for cid in cids if cid in self._pending}
+        if drop:
+            for cid in drop:
+                del self._pending[cid]
+            kept = [(r, c) for r, c in zip(self._raws, self._cids)
+                    if c not in drop]
+            self._raws = [r for r, _ in kept]
+            self._cids = [c for _, c in kept]
+        # the open buffer's stats never credited physical bytes (flush
+        # hands the batch to inner), so only the delete count is ours to
+        # track — inner's stats carry the physical reclaim
+        self.inner.delete_many(cids)
+        removed = sum(1 for cid, p in zip(cids, in_inner)
+                      if p or cid in drop)
+        self.stats.deletes += removed
+        return removed
+
+    def iter_cids(self):
+        if self._closed:
+            return self.inner.iter_cids()
+        pending = list(self._pending)
+        seen = set(pending)
+        return iter(pending + [c for c in self.inner.iter_cids()
+                               if c not in seen])
+
     # ------------------------------------------------------------- flush
     def flush(self) -> None:
         """Commit all pending chunks in one inner ``put_many`` and close."""

@@ -5,8 +5,8 @@ from __future__ import annotations
 
 from collections import OrderedDict
 
-from .backend import (BackendBase, overlay_get_many, overlay_has_many,
-                      put_via)
+from .backend import (BackendBase, delete_via, overlay_get_many,
+                      overlay_has_many, put_via)
 
 
 class LRUCacheBackend(BackendBase):
@@ -55,6 +55,18 @@ class LRUCacheBackend(BackendBase):
 
     def has_many(self, cids) -> list[bool]:
         return overlay_has_many(self._cache, cids, self.inner.has_many)
+
+    def delete_many(self, cids) -> int:
+        # invalidate cache entries first so a concurrent read can't serve
+        # a deleted chunk from the overlay
+        for cid in cids:
+            raw = self._cache.pop(cid, None)
+            if raw is not None:
+                self._cache_bytes -= len(raw)
+        return delete_via(self.stats, self.inner, cids)
+
+    def iter_cids(self):
+        return self.inner.iter_cids()
 
     @property
     def hit_rate(self) -> float:

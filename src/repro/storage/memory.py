@@ -1,27 +1,43 @@
 """In-memory content-addressed backend with optional append-only log
 (paper §4.4).  This is the leaf store every composite backend (cache,
-replication, sharding, routing) eventually bottoms out in."""
+replication, sharding, routing) eventually bottoms out in.
+
+The log is a record stream ``cid | u32 len | payload``; a delete appends
+a *tombstone* record (``len == 0xFFFFFFFF``, no payload), so replay of an
+uncompacted log converges to the live set and a crash between a GC sweep
+and compaction cannot resurrect dead chunks.  ``compact_log`` rewrites
+only the live chunks to a fresh file and atomically replaces the old one
+(the space-reclamation half of the GC subsystem)."""
 from __future__ import annotations
 
 import os
 import struct
 
-from .backend import BackendBase, ChunkMissing, resolve_cids
+from .backend import (BackendBase, ChunkMissing, TamperedChunk,
+                      resolve_cids)
 
 _LEN = struct.Struct("<I")
+_TOMBSTONE = 0xFFFFFFFF
 
 
 class MemoryBackend(BackendBase):
     """dict-backed store; with ``log_path`` every new chunk is appended to
-    a log-structured file and replayed on open (torn tails recovered)."""
+    a log-structured file and replayed on open (torn tails recovered,
+    tombstones applied; with ``verify=True`` every replayed chunk is
+    re-hashed and tampering raises TamperedChunk)."""
 
     def __init__(self, log_path: str | None = None, verify: bool = False):
         super().__init__()
         self._data: dict[bytes, bytes] = {}
         self.verify = verify
-        self._log = open(log_path, "ab") if log_path else None
-        if log_path and os.path.getsize(log_path) > 0:
-            self._replay(log_path)
+        self._log_path = log_path
+        self._log = None
+        if log_path:
+            # replay (truncating any torn tail) BEFORE opening for
+            # append, so post-crash records land at a parseable offset
+            if os.path.exists(log_path) and os.path.getsize(log_path) > 0:
+                self._replay(log_path)
+            self._log = open(log_path, "ab")
 
     # ------------------------------------------------------------ batched
     def put_many(self, raws, cids=None) -> list[bytes]:
@@ -34,8 +50,8 @@ class MemoryBackend(BackendBase):
             # would just re-hash the same bytes
             from ..core.chunk import cid_of
             for i in provided:
-                assert out[i] == cid_of(raws[i]), \
-                    "cid/content mismatch on Put-Chunk"
+                if out[i] != cid_of(raws[i]):
+                    raise TamperedChunk(out[i], "Put-Chunk")
         st = self.stats
         st.put_batches += 1
         for raw, cid in zip(raws, out):
@@ -61,12 +77,31 @@ class MemoryBackend(BackendBase):
                 raise ChunkMissing(cid)
             if self.verify:
                 from ..core.chunk import cid_of
-                assert cid_of(raw) == cid, "tampered chunk detected"
+                if cid_of(raw) != cid:
+                    raise TamperedChunk(cid, "Get-Chunk")
             out.append(raw)
         return out
 
     def has_many(self, cids) -> list[bool]:
         return [cid in self._data for cid in cids]
+
+    def delete_many(self, cids) -> int:
+        st = self.stats
+        n = 0
+        for cid in cids:
+            raw = self._data.pop(cid, None)
+            if raw is None:
+                continue               # absent cids are a no-op
+            n += 1
+            st.deletes += 1
+            st.physical_bytes -= len(raw)
+            st.reclaimed_bytes += len(raw)
+            if self._log is not None:
+                self._log.write(cid + _LEN.pack(_TOMBSTONE))
+        return n
+
+    def iter_cids(self):
+        return iter(list(self._data))
 
     def __len__(self) -> int:
         return len(self._data)
@@ -78,7 +113,9 @@ class MemoryBackend(BackendBase):
 
     # ---------------------------------------------------------------- log
     def _replay(self, path: str) -> None:
+        from ..core.chunk import cid_of
         from ..core.hashing import CID_LEN
+        good = 0                       # offset after the last whole record
         with open(path, "rb") as f:
             while True:
                 head = f.read(CID_LEN + 4)
@@ -86,8 +123,50 @@ class MemoryBackend(BackendBase):
                     break
                 cid = head[:CID_LEN]
                 (ln,) = _LEN.unpack(head[CID_LEN:])
+                if ln == _TOMBSTONE:   # deleted later in the stream
+                    old = self._data.pop(cid, None)
+                    if old is not None:
+                        self.stats.physical_bytes -= len(old)
+                    good = f.tell()
+                    continue
                 raw = f.read(ln)
                 if len(raw) < ln:
                     break  # torn tail write: recover prefix
+                if self.verify and cid_of(raw) != cid:
+                    raise TamperedChunk(cid, "log replay")
+                if cid not in self._data:
+                    self.stats.physical_bytes += ln
                 self._data[cid] = raw
-                self.stats.physical_bytes += ln
+                good = f.tell()
+        if good < os.path.getsize(path):
+            # drop the torn tail ON DISK too: appending after unparseable
+            # bytes would corrupt every later record (replay would read
+            # them as the torn record's payload — tombstones and new
+            # chunks silently lost)
+            os.truncate(path, good)
+
+    def log_size(self) -> int:
+        """Current on-disk log size in bytes (0 without a log)."""
+        if self._log is None:
+            return 0
+        self._log.flush()
+        return os.path.getsize(self._log_path)
+
+    def compact_log(self) -> tuple[int, int]:
+        """Rewrite the log with only the live chunks — dead records and
+        tombstones drop out — then atomically replace it (write + fsync +
+        rename, so a crash mid-compaction leaves the old log intact).
+        Returns (bytes_before, bytes_after)."""
+        if self._log is None:
+            return (0, 0)
+        before = self.log_size()
+        tmp = self._log_path + ".compact"
+        with open(tmp, "wb") as f:
+            for cid, raw in self._data.items():
+                f.write(cid + _LEN.pack(len(raw)) + raw)
+            f.flush()
+            os.fsync(f.fileno())
+        self._log.close()
+        os.replace(tmp, self._log_path)
+        self._log = open(self._log_path, "ab")
+        return before, os.path.getsize(self._log_path)

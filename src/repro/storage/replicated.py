@@ -3,8 +3,8 @@ preserved globally — at most k copies of any chunk exist — and reads
 fail over across the replica ring."""
 from __future__ import annotations
 
-from .backend import (BackendBase, ChunkMissing, group_by, put_via,
-                      resolve_cids)
+from .backend import (BackendBase, ChunkMissing, delete_via, group_by,
+                      put_via, resolve_cids)
 
 
 class ReplicatedBackend(BackendBase):
@@ -77,6 +77,27 @@ class ReplicatedBackend(BackendBase):
                 out[i] = p or any(self.stores[ri].has(cid)
                                   for ri in self._ring(cid)[1:])
         return out
+
+    def delete_many(self, cids) -> int:
+        """All-replica delete: a swept chunk leaves every copy in the ring
+        (deletes counted once per distinct chunk, like dedup on Put)."""
+        st = self.stats
+        n = 0
+        groups: dict[int, list[bytes]] = {}
+        for cid in cids:
+            if cid not in self._known:
+                continue
+            self._known.discard(cid)
+            n += 1
+            st.deletes += 1
+            for si in self._ring(cid):
+                groups.setdefault(si, []).append(cid)
+        for si, cs in groups.items():
+            delete_via(st, self.stores[si], cs, count_deletes=False)
+        return n
+
+    def iter_cids(self):
+        return iter(list(self._known))
 
     def __len__(self) -> int:
         return len(self._known)

@@ -4,7 +4,8 @@ cryptographic hashes, chunks spread uniformly across shards even under
 severely skewed key workloads (Fig. 15)."""
 from __future__ import annotations
 
-from .backend import BackendBase, group_by, put_via, resolve_cids
+from .backend import (BackendBase, delete_via, group_by, put_via,
+                      resolve_cids)
 from .memory import MemoryBackend
 
 
@@ -45,6 +46,18 @@ class ShardedBackend(BackendBase):
 
     def has_many(self, cids) -> list[bool]:
         return [self.shards[self._owner(cid)].has(cid) for cid in cids]
+
+    def delete_many(self, cids) -> int:
+        """Sweep fan-out: one delete_many per owning shard."""
+        n = 0
+        for si, (_, cs, _) in group_by(lambda i, c: self._owner(c),
+                                       cids).items():
+            n += delete_via(self.stats, self.shards[si], cs)
+        return n
+
+    def iter_cids(self):
+        for s in self.shards:
+            yield from s.iter_cids()
 
     def __len__(self) -> int:
         return sum(len(s) for s in self.shards)

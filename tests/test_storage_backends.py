@@ -1,8 +1,10 @@
-"""Backend conformance: one shared put/get/has/dedup/stats suite over
-every StorageBackend implementation (memory, log, LRU, replicated,
+"""Backend conformance: one shared put/get/has/delete/dedup/stats suite
+over every StorageBackend implementation (memory, log, LRU, replicated,
 sharded, cluster routing), plus the batched-pipeline invariants:
 a value with N chunks commits via one put_many batch, and the
-vectorized fphash path matches the per-chunk kernel bit-for-bit."""
+vectorized fphash path matches the per-chunk kernel bit-for-bit.
+The delete/GC cases cover the sweep verb added for garbage collection:
+chunks leave every replica/shard/cache coherently and stats shrink."""
 import numpy as np
 import pytest
 
@@ -10,7 +12,7 @@ from repro.core import Cluster, ForkBase, FBlob, FMap
 from repro.core.chunk import cid_of, encode_chunk
 from repro.storage import (ChunkMissing, LRUCacheBackend, MemoryBackend,
                            ReplicatedBackend, ShardedBackend, StorageBackend,
-                           WriteBuffer, make_backend)
+                           TamperedChunk, WriteBuffer, make_backend)
 
 BACKENDS = ["memory", "log", "lru", "replicated", "sharded", "routing"]
 
@@ -118,6 +120,228 @@ def test_flush_is_safe(backend, rng):
     cid = backend.put(encode_chunk(3, rng.bytes(100)))
     backend.flush()
     assert backend.get(cid)
+
+
+# --------------------------------------------------------- delete (GC sweep)
+
+@all_backends
+def test_delete_many_removes_everywhere(backend, rng):
+    raws = chunks(rng, n=12)
+    cids = backend.put_many(raws)
+    phys = _physical_bytes(backend)
+    assert backend.delete_many(cids[:5]) == 5
+    assert backend.has_many(cids) == [False] * 5 + [True] * 7
+    with pytest.raises(KeyError):
+        backend.get(cids[0])
+    assert len(backend) == 7
+    st = backend.stats
+    assert st.deletes == 5
+    assert st.reclaimed_bytes > 0
+    assert 0 <= _physical_bytes(backend) < phys
+    assert backend.get_many(cids[5:]) == raws[5:]   # survivors intact
+
+
+@all_backends
+def test_delete_missing_is_noop(backend, rng):
+    cid = backend.put(encode_chunk(3, rng.bytes(64)))
+    assert backend.delete_many([bytes(32)]) == 0
+    assert backend.stats.deletes == 0
+    assert backend.get(cid)
+
+
+@all_backends
+def test_reput_after_delete(backend, rng):
+    raw = encode_chunk(3, rng.bytes(500))
+    cid = backend.put(raw)
+    backend.delete(cid)
+    d0 = backend.stats.dedup_hits
+    assert backend.put(raw) == cid                  # fresh put, not dedup
+    assert backend.stats.dedup_hits == d0
+    assert backend.get(cid) == raw
+
+
+@all_backends
+def test_iter_cids_is_sweep_inventory(backend, rng):
+    raws = chunks(rng, n=9)
+    cids = backend.put_many(raws)
+    assert set(backend.iter_cids()) == set(cids)
+    backend.delete_many(cids[:4])
+    assert set(backend.iter_cids()) == set(cids[4:])
+
+
+def _physical_bytes(backend):
+    """Physical truth for a stack: cluster routing stores are write-side
+    views, so sum the node stores instead."""
+    cl = getattr(backend, "cluster", None)
+    if cl is not None:
+        return sum(n.store.stats.physical_bytes for n in cl.nodes)
+    return backend.stats.physical_bytes
+
+
+@all_backends
+def test_gc_collects_removed_branch_through_stack(backend, rng):
+    """Acceptance: two branches, remove one, collect; the store shrinks
+    and the surviving head reads back byte-identical — through every
+    backend stack (memory/log/LRU/replicated/sharded/cluster routing)."""
+    db = ForkBase(backend)
+    keep = rng.bytes(60_000)
+    db.put("k", FBlob(keep))
+    db.fork("k", "master", "scratch")
+    db.put("k", FBlob(rng.bytes(60_000)), "scratch")
+    n0 = len(backend)
+    phys0 = _physical_bytes(backend)
+    db.remove("k", "scratch")
+    report = db.gc()
+    assert report.swept_chunks > 0
+    assert len(backend) < n0
+    assert 0 <= _physical_bytes(backend) < phys0
+    assert db.get("k").blob().read() == keep
+    # idempotent: a second collect sweeps nothing
+    assert db.gc().swept_chunks == 0
+
+
+@pytest.mark.parametrize("backend", ["replicated"], indirect=True)
+def test_delete_removes_all_replicas(backend, rng):
+    raw = encode_chunk(3, rng.bytes(900))
+    cid = backend.put(raw)
+    assert sum(1 for s in backend.stores if s.has(cid)) == backend.k
+    assert backend.delete(cid) == 1
+    assert not any(s.has(cid) for s in backend.stores)
+    assert backend.stats.deletes == 1               # counted once, not k
+
+
+@pytest.mark.parametrize("backend", ["lru"], indirect=True)
+def test_delete_invalidates_cache(backend, rng):
+    cid = backend.put(encode_chunk(3, rng.bytes(700)))
+    backend.get(cid)                                # hot in cache
+    backend.delete(cid)
+    assert not backend.has(cid)
+    with pytest.raises(ChunkMissing):
+        backend.get(cid)                            # not served from LRU
+
+
+@pytest.mark.parametrize("backend", ["routing"], indirect=True)
+def test_cluster_delete_updates_index_and_node_stats(backend, rng):
+    cl = backend.cluster
+    cids = backend.put_many(chunks(rng, n=40))
+    bytes0 = sum(n.stats.chunk_bytes for n in cl.nodes)
+    backend.delete_many(cids[:15])
+    assert all(c not in cl.index for c in cids[:15])
+    assert sum(n.stats.chunks for n in cl.nodes) == 25
+    assert sum(n.stats.chunk_bytes for n in cl.nodes) < bytes0
+
+
+def test_write_buffer_delete_counts_pending_and_inner_once(rng):
+    """A cid both pending and already stored inner is ONE logical chunk."""
+    inner = MemoryBackend()
+    raw = encode_chunk(3, rng.bytes(200))
+    cid = inner.put(raw)
+    buf = WriteBuffer(inner)
+    buf.put(raw)                                    # pending duplicate
+    assert buf.delete_many([cid, cid]) == 1
+    assert not inner.has(cid) and not buf.has(cid)
+
+
+def test_write_buffer_delete_retracts_pending(rng):
+    inner = MemoryBackend()
+    buf = WriteBuffer(inner)
+    raws = chunks(rng, n=4)
+    cids = buf.put_many(raws)
+    buf.delete_many(cids[:2])                       # never reach the store
+    assert buf.has_many(cids) == [False, False, True, True]
+    buf.flush()
+    assert len(inner) == 2
+    assert inner.get_many(cids[2:]) == raws[2:]
+    # closed buffer: transparent pass-through
+    assert buf.delete_many([cids[2]]) == 1
+    assert not inner.has(cids[2])
+
+
+# --------------------------------------------------- log: tombstones, compact
+
+def test_log_tombstones_survive_reopen(tmp_path, rng):
+    path = str(tmp_path / "chunks.log")
+    be = MemoryBackend(log_path=path)
+    cids = be.put_many(chunks(rng, n=6))
+    be.delete_many(cids[:3])
+    be.flush()
+    # replay WITHOUT compaction: deletes must not resurrect
+    be2 = MemoryBackend(log_path=path)
+    assert be2.has_many(cids) == [False] * 3 + [True] * 3
+    assert len(be2) == 3
+
+
+def test_compact_log_shrinks_and_preserves(tmp_path, rng):
+    path = str(tmp_path / "chunks.log")
+    be = MemoryBackend(log_path=path)
+    raws = chunks(rng, n=10, size=800)
+    cids = be.put_many(raws)
+    be.delete_many(cids[:7])
+    before, after = be.compact_log()
+    assert after < before
+    assert be.log_size() == after
+    # compacted log replays to exactly the live set
+    be2 = MemoryBackend(log_path=path, verify=True)
+    assert len(be2) == 3
+    assert be2.get_many(cids[7:]) == raws[7:]
+    assert be2.stats.physical_bytes == be.stats.physical_bytes
+    # backend stays writable after compaction (handle reopened)
+    extra = be.put(encode_chunk(3, rng.bytes(128)))
+    be.flush()
+    assert MemoryBackend(log_path=path).has(extra)
+
+
+def test_torn_tail_truncated_so_postcrash_writes_survive(tmp_path, rng):
+    """Recovery must truncate the torn record on disk: records appended
+    after it (tombstones, new chunks) would otherwise be parsed as the
+    torn record's payload on the next replay and silently lost."""
+    path = str(tmp_path / "chunks.log")
+    be = MemoryBackend(log_path=path)
+    cids = be.put_many(chunks(rng, n=3))
+    be.flush()
+    with open(path, "r+b") as f:        # crash mid-append: torn record
+        f.seek(0, 2)
+        f.write(b"\x03torn-partial-record")
+    be2 = MemoryBackend(log_path=path)  # recovers prefix, truncates tail
+    assert len(be2) == 3
+    be2.delete_many(cids[:1])           # post-crash tombstone
+    extra = be2.put(encode_chunk(3, rng.bytes(99)))
+    be2.flush()
+    be3 = MemoryBackend(log_path=path)
+    assert not be3.has(cids[0])         # tombstone replayed, not eaten
+    assert be3.has(extra)               # post-crash put survived
+    assert be3.get_many(cids[1:]) == be2.get_many(cids[1:])
+
+
+def test_compact_without_log_is_noop():
+    assert MemoryBackend().compact_log() == (0, 0)
+
+
+# ----------------------------------------------------- tamper detection
+
+def test_replay_detects_tampering(tmp_path, rng):
+    path = str(tmp_path / "chunks.log")
+    be = MemoryBackend(log_path=path)
+    raw = encode_chunk(3, rng.bytes(300))
+    be.put(raw)
+    be.flush()
+    blob = open(path, "rb").read()
+    open(path, "wb").write(blob[:-1] + bytes([blob[-1] ^ 0xFF]))
+    with pytest.raises(TamperedChunk):
+        MemoryBackend(log_path=path, verify=True)
+    # without verify the tamper goes through (documented trade-off)
+    assert len(MemoryBackend(log_path=path)) == 1
+
+
+def test_put_get_tamper_checks_are_typed(rng):
+    be = MemoryBackend(verify=True)
+    raw = encode_chunk(3, rng.bytes(100))
+    with pytest.raises(TamperedChunk):
+        be.put(raw, cid=bytes(32))                  # wrong caller cid
+    cid = be.put(raw)
+    be._data[cid] = raw[:-1] + bytes([raw[-1] ^ 1])
+    with pytest.raises(TamperedChunk):
+        be.get(cid)
 
 
 # ------------------------------------------------------- batched pipeline
