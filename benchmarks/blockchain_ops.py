@@ -8,7 +8,6 @@ from __future__ import annotations
 import numpy as np
 
 from repro.apps import ForkBaseLedger, KVLedger
-from repro.apps.blockchain_kv import BucketTree
 from repro.core import ForkBase, FString
 
 from .common import bench, emit

@@ -1,0 +1,126 @@
+"""Proof subsystem benchmark -> BENCH_proof.json.
+
+Three questions:
+  * proof size: O(log n) — mean membership-proof bytes and heights for
+    maps of growing cardinality;
+  * prove/verify throughput: per-proof verification (every proof decodes
+    its own path and hashes node-by-node) vs batched verification
+    (``verify_member_many``: distinct nodes across the batch hashed with
+    ONE ``content_hash_many`` dispatch and decoded once) — under the
+    sha256 host hash and under the ``fphash`` dedup-path hash (one
+    Pallas launch per batch on TPU; vectorized host sponge off-TPU);
+  * verification accounting: StoreStats verifies/verify_failures over a
+    verify-enabled store, surfaced in benchmarks/run.py.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import FMap, ForkBase, hashing
+from repro.core.postree import POSTree
+from repro.proof import prove_member, verify_member, verify_member_many
+from repro.storage import MemoryBackend
+
+from .common import emit
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_proof.json")
+
+N_PROOFS = 1024
+MAP_N = 10_000
+
+
+def _build_map(n: int, rng) -> tuple[bytes, POSTree, ForkBase]:
+    db = ForkBase(MemoryBackend())
+    db.put("m", FMap({b"k%07d" % i: rng.bytes(24) for i in range(n)}))
+    obj = db.get("m").obj
+    return obj.data, POSTree.from_root(db.store, obj.type, obj.data,
+                                       db.params), db
+
+
+def _proof_sizes(rng) -> list[dict]:
+    out = []
+    for n in (1_000, 10_000, 100_000):
+        root, tree, _ = _build_map(n, rng)
+        sizes = [prove_member(tree, pos=int(p)).size
+                 for p in rng.integers(0, n, 24)]
+        out.append({"n": n, "height": tree.height,
+                    "avg_proof_bytes": sum(sizes) / len(sizes)})
+        emit(f"proof_size_n{n}", out[-1]["avg_proof_bytes"],
+             f"height {tree.height}")
+    return out
+
+
+def _throughput(rng) -> dict:
+    res = {}
+    for hash_name, use in [("sha256", hashing.use_sha256),
+                           ("fphash", hashing.use_fphash)]:
+        use()
+        try:
+            root, tree, _ = _build_map(MAP_N, rng)
+            positions = [int(p) for p in rng.integers(0, MAP_N, N_PROOFS)]
+            t0 = time.perf_counter()
+            proofs = [prove_member(tree, pos=p) for p in positions]
+            prove_s = time.perf_counter() - t0
+            items = [(root, p) for p in proofs]
+            # batched: dedup + ONE hash dispatch for the whole batch
+            t0 = time.perf_counter()
+            claims = verify_member_many(items)
+            batched_s = time.perf_counter() - t0
+            assert len(claims) == N_PROOFS
+            # per-proof: every proof pays its own decode + hash batch
+            t0 = time.perf_counter()
+            for rc, p in items:
+                verify_member(rc, p)
+            per_proof_s = time.perf_counter() - t0
+            res[f"prove_{hash_name}_us"] = prove_s / N_PROOFS * 1e6
+            res[f"verify_per_proof_{hash_name}_us"] = \
+                per_proof_s / N_PROOFS * 1e6
+            res[f"verify_batched_{hash_name}_us"] = \
+                batched_s / N_PROOFS * 1e6
+            emit(f"proof_verify_per_proof_{hash_name}",
+                 res[f"verify_per_proof_{hash_name}_us"])
+            emit(f"proof_verify_batched_{hash_name}",
+                 res[f"verify_batched_{hash_name}_us"],
+                 f"x{per_proof_s / batched_s:.2f} vs per-proof")
+        finally:
+            hashing.use_sha256()
+    res["batched_fphash_vs_per_proof_sha256"] = (
+        res["verify_per_proof_sha256_us"]
+        / res["verify_batched_fphash_us"])
+    res["batched_vs_per_proof_sha256"] = (
+        res["verify_per_proof_sha256_us"]
+        / res["verify_batched_sha256_us"])
+    return res
+
+
+def _verify_accounting(rng) -> dict:
+    store = MemoryBackend(verify=True)
+    db = ForkBase(store, verify_get=True)
+    db.put("m", FMap({b"k%05d" % i: rng.bytes(32) for i in range(2000)}))
+    for _ in range(20):
+        db.get("m").map().get(b"k00042")
+    rep = db.audit()
+    return {"store_verifies": store.stats.verifies,
+            "store_verify_failures": store.stats.verify_failures,
+            "audit_proofs_verified": rep.proofs_verified,
+            "audit_ok": rep.ok}
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    out = {"n_proofs": N_PROOFS, "map_n": MAP_N}
+    out["proof_sizes"] = _proof_sizes(rng)
+    out.update(_throughput(rng))
+    out.update(_verify_accounting(rng))
+    with open(BENCH_JSON, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# wrote {BENCH_JSON}")
+
+
+if __name__ == "__main__":
+    run()

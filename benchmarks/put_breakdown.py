@@ -12,7 +12,7 @@ import time
 import numpy as np
 
 from repro.core import FBlob, ForkBase, FString
-from repro.core.chunk import cid_of, encode_chunk
+from repro.core.chunk import encode_chunk
 from repro.core.chunker import DEFAULT_PARAMS, boundary_bitmap
 from repro.core.chunkstore import ChunkStore
 from repro.core.fobject import FObject

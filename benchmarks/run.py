@@ -9,9 +9,9 @@ import os
 import sys
 import time
 
-MODULES = ["micro_ops", "put_breakdown", "gc_bench", "scalability",
-           "blockchain_ops", "merkle_trees", "scan_queries", "wiki_bench",
-           "analytics_bench", "ckpt_dedup"]
+MODULES = ["micro_ops", "put_breakdown", "gc_bench", "proof_bench",
+           "scalability", "blockchain_ops", "merkle_trees", "scan_queries",
+           "wiki_bench", "analytics_bench", "ckpt_dedup"]
 
 
 def main() -> None:
@@ -35,6 +35,20 @@ def main() -> None:
                   f"{g['log_bytes_before_compact']} -> "
                   f"{g['log_bytes_after_compact']} B; ckpt prune "
                   f"reclaimed {g['ckpt_reclaimed_bytes']} B")
+    if "proof_bench" in only:
+        from .proof_bench import BENCH_JSON as PROOF_JSON
+        if os.path.exists(PROOF_JSON):
+            p = json.load(open(PROOF_JSON))
+            big = p["proof_sizes"][-1]
+            print(f"# proofs: size n={big['n']} -> "
+                  f"{big['avg_proof_bytes']:.0f} B (h={big['height']}); "
+                  f"batched fphash verify "
+                  f"{p['verify_batched_fphash_us']:.0f}us/proof vs "
+                  f"per-proof sha256 "
+                  f"{p['verify_per_proof_sha256_us']:.0f}us "
+                  f"(x{p['batched_fphash_vs_per_proof_sha256']:.2f}); "
+                  f"store verifies {p['store_verifies']} "
+                  f"({p['store_verify_failures']} failures)")
     if "put_breakdown" in only:
         from .put_breakdown import BENCH_JSON
         if os.path.exists(BENCH_JSON):

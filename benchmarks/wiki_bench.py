@@ -10,9 +10,9 @@ import time
 import numpy as np
 
 from repro.apps import ForkBaseWiki, RedisWiki
-from repro.core import Cluster, FBlob, ForkBase
+from repro.core import Cluster, FBlob
 
-from .common import bench, emit
+from .common import emit
 
 
 def run():

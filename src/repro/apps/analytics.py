@@ -14,10 +14,8 @@ full new vector; version diff compares full vectors — Fig. 16/17a).
 from __future__ import annotations
 
 import struct
-from dataclasses import dataclass
 
 from ..core import FList, FMap, FTuple, ForkBase
-from ..core import chunk as ck
 
 _I64 = struct.Struct("<q")
 

@@ -21,10 +21,9 @@ handful of Puts.
 from __future__ import annotations
 
 import json
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from ..core import FBlob, FMap, ForkBase
-from ..core.fobject import load_fobject
 
 
 @dataclass
@@ -132,3 +131,164 @@ class ForkBaseLedger:
         head = blocks[0].uid
         target = blocks[self.height - 1 - height].uid
         return self.db.verify_lineage(head, target)
+
+    # ------------------------------------------------- light-client proofs
+    def block_uid(self, height: int) -> bytes:
+        return self.db.track("chain", "master")[self.height - 1 - height].uid
+
+    def prove_block(self, height: int):
+        """Lineage proof chain-head -> block (proof subsystem): a light
+        client holding only the head uid authenticates the block and its
+        distance from the head."""
+        return self.db.prove_lineage(self.db.get("chain").uid,
+                                     self.block_uid(height))
+
+    def prove_state(self, contract: str, key: str,
+                    height: int | None = None) -> "StateProof":
+        """Full stateless state proof for one (contract, key) at a block:
+        chain-head lineage -> block meta -> Fig. 7(b)'s two-level Map by
+        membership proofs -> the value Blob, one leaf proof per chunk.
+        Everything an untrusting client needs; no store handle anywhere."""
+        from ..core.postree import POSTree
+        from ..proof.membership import prove_member
+        height = self.height - 1 if height is None else height
+        db = self.db
+        block_uid = self.block_uid(height)
+        lineage = db.prove_lineage(db.get("chain").uid, block_uid)
+        block_raw = db.prove_version(block_uid)
+        state_entry = db.prove_member("chain", uid=block_uid,
+                                      item_key=b"state")
+        l1_uid = bytes(db.get("chain", uid=block_uid).map().get(b"state"))
+        l1_raw = db.prove_version(l1_uid)
+        l1_entry = db.prove_member("__l1__", uid=l1_uid,
+                                   item_key=contract.encode())
+        l2_uid = bytes(db.get("__l1__", uid=l1_uid).map()
+                       .get(contract.encode()))
+        l2_raw = db.prove_version(l2_uid)
+        l2_entry = db.prove_member(f"__l2__/{contract}", uid=l2_uid,
+                                   item_key=key.encode())
+        blob_uid = bytes(db.get(f"__l2__/{contract}", uid=l2_uid).map()
+                         .get(key.encode()))
+        blob_obj = db.get(f"{contract}/{key}", uid=blob_uid).obj
+        value_raw = db.prove_version(blob_uid)
+        tree = POSTree.from_root(db.store, blob_obj.type, blob_obj.data,
+                                 db.params)
+        value = tree.read_bytes(0, tree.total_count)
+        # one membership proof per leaf: their payloads tile the value
+        starts, s = [], 0
+        for e in tree.levels[0]:
+            starts.append(s)
+            s += e.count
+        value_proofs = tuple(prove_member(tree, pos=p).to_bytes()
+                             for p in starts) if value else ()
+        return StateProof(lineage.to_bytes(), block_raw,
+                          state_entry.to_bytes(), l1_raw,
+                          l1_entry.to_bytes(), l2_raw,
+                          l2_entry.to_bytes(), value_raw, value,
+                          value_proofs)
+
+
+@dataclass(frozen=True)
+class StateProof:
+    """Server-emitted bundle for LightClient.verify_state.  Each layer is
+    an independent stateless proof; the client threads the trust anchor
+    through them: head uid -> block -> state root -> contract map ->
+    value blob -> value bytes."""
+    lineage: bytes            # head -> block meta-chunk chain
+    block_raw: bytes          # block version record
+    state_entry: bytes        # b"state" in the block Map
+    l1_raw: bytes             # level-1 Map version record
+    l1_entry: bytes           # contract -> level-2 uid
+    l2_raw: bytes             # level-2 Map version record
+    l2_entry: bytes           # key -> value-blob uid
+    value_raw: bytes          # value Blob version record
+    value: bytes              # the claimed state bytes
+    value_proofs: tuple[bytes, ...]   # one leaf proof per value chunk
+
+    @property
+    def size(self) -> int:
+        return (len(self.lineage) + len(self.block_raw)
+                + len(self.state_entry) + len(self.l1_raw)
+                + len(self.l1_entry) + len(self.l2_raw)
+                + len(self.l2_entry) + len(self.value_raw)
+                + len(self.value) + sum(map(len, self.value_proofs)))
+
+
+class LightClient:
+    """Holds ONLY the trusted chain-head uid — no ledger, no store.
+    The paper's tamper-evidence story (§3.2) made operational: a replica
+    cannot present a spliced history, a substituted block, or a forged
+    state value without breaking one of the hash chains checked here."""
+
+    def __init__(self, head_uid: bytes):
+        self.head_uid = bytes(head_uid)
+
+    def verify_block(self, lineage_proof, block_uid: bytes) -> int:
+        """Authenticates ``block_uid`` as an ancestor of the trusted
+        head; returns its distance from the head."""
+        from ..proof import verify_lineage
+        return len(verify_lineage(self.head_uid, block_uid,
+                                  lineage_proof)) - 1
+
+    def verify_state(self, proof: StateProof,
+                     contract: str, key: str) -> tuple[int, bytes]:
+        """Returns (block distance from head, authenticated value bytes);
+        raises proof.InvalidProof on any forged layer."""
+        from ..core import chunk as ck
+        from ..core.hashing import content_hash_many
+        from ..proof import (InvalidProof, LineageProof, MembershipProof,
+                             verify_lineage, verify_member,
+                             verify_version)
+        lp = LineageProof.from_bytes(proof.lineage)
+        if not lp.raws:
+            raise InvalidProof("empty lineage")
+        # the chain from the trusted head authenticates its own tail
+        block_uid = content_hash_many([lp.raws[-1]])[0]
+        chain = verify_lineage(self.head_uid, block_uid, lp)
+        block = verify_version(block_uid, proof.block_raw)
+        claim = verify_member(block.data, proof.state_entry)
+        if claim.key != b"state":
+            raise InvalidProof("state-root entry proves the wrong key")
+        l1 = verify_version(claim.value, proof.l1_raw)
+        claim = verify_member(l1.data, proof.l1_entry)
+        if claim.key != contract.encode():
+            raise InvalidProof("contract entry proves the wrong key")
+        l2 = verify_version(claim.value, proof.l2_raw)
+        claim = verify_member(l2.data, proof.l2_entry)
+        if claim.key != key.encode():
+            raise InvalidProof("state-key entry proves the wrong key")
+        blob = verify_version(claim.value, proof.value_raw)
+        # value completeness: verified leaf payloads must tile the
+        # claimed bytes exactly and cover the tree's full item count;
+        # an EMPTY claim is only accepted when the authenticated root
+        # IS the canonical empty-blob leaf (a server cannot present a
+        # non-empty state as empty by dropping the leaf proofs)
+        if not proof.value_proofs:
+            empty_root = content_hash_many(
+                [ck.encode_chunk(ck.BLOB, b"")])[0]
+            if proof.value != b"" or blob.data != empty_root:
+                raise InvalidProof("value proof does not cover the value")
+            return len(chain) - 1, b""
+        pos, total = 0, None
+        for vp in proof.value_proofs:
+            mp = MembershipProof.from_bytes(vp)
+            c = verify_member(blob.data, mp)
+            if c.pos != pos:
+                raise InvalidProof("value leaves not contiguous")
+            payload = ck.chunk_payload(mp.leaf)
+            if proof.value[pos:pos + len(payload)] != payload:
+                raise InvalidProof("claimed value bytes diverge")
+            pos += len(payload)
+            if total is None:
+                total = (_root_count(mp) if mp.nodes
+                         else len(payload))
+        if pos != len(proof.value) or (total or 0) != len(proof.value):
+            raise InvalidProof("value proof does not cover the value")
+        return len(chain) - 1, proof.value
+
+
+def _root_count(mp) -> int:
+    """Authenticated total item count from a proof's root index node."""
+    from ..core import chunk as ck
+    entries = ck.decode_uindex(ck.chunk_payload(mp.nodes[0]))
+    return sum(e.count for e in entries)

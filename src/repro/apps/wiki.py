@@ -13,11 +13,8 @@ persistence).
 from __future__ import annotations
 
 import zlib
-from dataclasses import dataclass, field
 
 from ..core import FBlob, ForkBase
-from ..core import chunk as ck
-from ..core.postree import POSTree
 
 
 class ForkBaseWiki:

@@ -19,7 +19,6 @@ the restarted job has (elastic resize — the checkpoint is mesh-agnostic).
 from __future__ import annotations
 
 import json
-from dataclasses import dataclass
 
 import jax
 import numpy as np

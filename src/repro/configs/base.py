@@ -7,7 +7,7 @@ via ShapeDtypeStructs (launch/dryrun.py) — never allocated here.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,7 @@ commits rely on (postree.py) and tests/test_chunker.py asserts.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Sequence
 
 import numpy as np

@@ -15,7 +15,7 @@ work-queue transfer between servlets.
 from __future__ import annotations
 
 import hashlib
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from . import chunk as ck
 from .chunker import ChunkParams, DEFAULT_PARAMS
@@ -159,12 +159,14 @@ class Cluster:
     """In-process ForkBase cluster."""
 
     def __init__(self, n_nodes: int = 4, mode: str = "2LP",
-                 params: ChunkParams = DEFAULT_PARAMS):
+                 params: ChunkParams = DEFAULT_PARAMS,
+                 verify: bool = False):
         assert mode in ("1LP", "2LP")
         self.mode = mode
         self.params = params
         self.index: dict[bytes, int] = {}   # master's chunk location map
-        self.nodes = [Node(ChunkStore(), NodeStats()) for _ in range(n_nodes)]
+        self.nodes = [Node(ChunkStore(verify=verify), NodeStats())
+                      for _ in range(n_nodes)]
         for i, node in enumerate(self.nodes):
             node.servlet = ForkBase(_RoutingStore(self, i), params)
 
@@ -239,6 +241,32 @@ class Cluster:
         return GCReport(roots=len(roots), live_chunks=len(live),
                         swept_chunks=swept, reclaimed_bytes=reclaimed,
                         mark_rounds=rounds, missing_roots=missing)
+
+    # ---- audit RPC verbs (proof subsystem) ----
+    def attest(self, context: bytes = b"", secret: bytes | None = None):
+        """Dispatcher attestation: one Merkle commitment per servlet's
+        branch table plus a cluster root over the servlet roots — a
+        light client pins the cluster root and drills into any node.
+        Returns (cluster Attestation, per-servlet attestations)."""
+        from ..proof.attest import (Attestation, leaf_hash, merkle_root,
+                                    sign)
+        atts = [nd.servlet.attest(
+                    context=bytes(context) + b"|node%d" % i, secret=secret)
+                for i, nd in enumerate(self.nodes)]
+        cluster_att = Attestation(
+            merkle_root([leaf_hash(a.root) for a in atts]),
+            len(atts), bytes(context))
+        return ((sign(cluster_att, secret) if secret is not None
+                 else cluster_att), atts)
+
+    def audit(self, sample: int = 64, seed: int = 0,
+              secret: bytes | None = None):
+        """Cluster-wide audit: master-index placement spot checks,
+        per-servlet head/membership/lineage proof verification, and
+        key-routing divergence — reported per offending node."""
+        from ..proof.audit import Auditor
+        return Auditor(sample=sample, seed=seed).audit_cluster(
+            self, secret=secret)
 
     # ---- §4.6.1 construction rebalancing ----
     def _build_servlet_for(self, key, value) -> ForkBase:

@@ -9,12 +9,11 @@ Both fork semantics are first-class:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Iterable
 
 from . import chunk as ck
 from . import merge as mg
-from .branch import (DEFAULT_BRANCH, BranchExists, BranchTable, GuardFailed,
+from .branch import (DEFAULT_BRANCH, BranchTable, GuardFailed,
                      NoSuchRef)
 from .chunker import ChunkParams, DEFAULT_PARAMS
 from .chunkstore import ChunkStore
@@ -89,9 +88,13 @@ class ForkBase:
     §4.1).  cluster.Cluster wires several of these behind a dispatcher."""
 
     def __init__(self, store: StorageBackend | None = None,
-                 params: ChunkParams = DEFAULT_PARAMS):
+                 params: ChunkParams = DEFAULT_PARAMS, *,
+                 verify_get: bool = False):
         self.store = store if store is not None else ChunkStore()
         self.params = params
+        # verify-on-get: every Get re-hashes the meta chunk against its
+        # uid (per-call ``verify=`` overrides; checks count in StoreStats)
+        self.verify_get = verify_get
         self.branches = BranchTable()
         # explicit GC roots: in-flight readers / retention holds pin the
         # uids they need across a concurrent collect()
@@ -149,14 +152,19 @@ class ForkBase:
 
     # ------------------------------------------------------------- get
     def get(self, key: bytes, branch: str | None = None, *,
-            uid: bytes | None = None) -> ValueHandle | None:
-        """M1 (branch get) / M2 (version get)."""
+            uid: bytes | None = None,
+            verify: bool | None = None) -> ValueHandle | None:
+        """M1 (branch get) / M2 (version get).  ``verify`` (default: the
+        engine's ``verify_get``) re-hashes the meta chunk against the uid
+        and raises TamperedChunk on mismatch."""
         key = _k(key)
         if uid is None:
             uid = self.branches.head(key, branch or DEFAULT_BRANCH)
             if uid is None:
                 return None
-        return ValueHandle(self, load_fobject(self.store, uid))
+        verify = self.verify_get if verify is None else verify
+        return ValueHandle(self, load_fobject(self.store, uid,
+                                              verify=verify))
 
     # ----------------------------------------------------------- views
     def list_keys(self) -> list[bytes]:                      # M8
@@ -371,21 +379,80 @@ class ForkBase:
         """Tamper-evidence check (§3.2): is `ancestor` in uid's history?
         Walking hashes re-verifies integrity chunk by chunk when the store
         runs with verify=True."""
-        frontier = [uid]
-        seen = set()
-        d = 0
-        while frontier and d < max_depth:
-            nxt = []
-            for u in frontier:
-                if u == ancestor:
-                    return True
-                if u in seen:
-                    continue
-                seen.add(u)
-                nxt.extend(load_fobject(self.store, u).bases)
-            frontier = nxt
-            d += 1
-        return ancestor in frontier
+        from ..proof.lineage import lineage_path
+        return lineage_path(self.store, uid, ancestor,
+                            max_depth=max_depth) is not None
+
+    # --------------------------------------------------- proof subsystem
+    # Prover-side verbs: each emits a self-contained proof an external
+    # verifier checks with repro.proof's stateless verify_* functions,
+    # holding only a trusted root cid / head uid / attestation.
+
+    def prove_lineage(self, uid: bytes, ancestor: bytes):
+        """Meta-chunk hash chain showing ``ancestor`` in uid's history
+        (verify with ``proof.verify_lineage(uid, ancestor, proof)``)."""
+        from ..proof.lineage import prove_lineage
+        return prove_lineage(self.store, uid, ancestor)
+
+    def prove_version(self, uid: bytes) -> bytes:
+        """The raw meta chunk binding ``uid`` to its version record —
+        the bridge from a trusted uid to the value's tree root cid
+        (verify with ``proof.verify_version(uid, raw)``)."""
+        return self.store.get(uid)
+
+    def _tree_of(self, obj: FObject) -> POSTree:
+        if obj.type not in CHUNKABLE_TYPES:
+            raise TypeNotMatch(obj.type_name())
+        return POSTree.from_root(self.store, obj.type, obj.data,
+                                 self.params)
+
+    def prove_member(self, key: bytes, branch: str | None = None, *,
+                     uid: bytes | None = None, pos: int | None = None,
+                     item_key: bytes | None = None):
+        """Membership proof for one element of a chunkable value —
+        by position (any kind) or by key (Set/Map).  Anchored on the
+        value's tree root cid = the ``data`` field of its (provable)
+        meta chunk; verify with ``proof.verify_member(root, proof)``."""
+        from ..proof.membership import prove_member
+        h = self.get(key, branch, uid=uid)
+        if h is None:
+            raise NoSuchRef(branch)
+        return prove_member(self._tree_of(h.obj), pos=pos, key=item_key)
+
+    def prove_absence(self, key: bytes, branch: str | None = None, *,
+                      uid: bytes | None = None,
+                      item_key: bytes = b""):
+        """Negative membership proof (sorted kinds)."""
+        from ..proof.membership import prove_absence
+        h = self.get(key, branch, uid=uid)
+        if h is None:
+            raise NoSuchRef(branch)
+        return prove_absence(self._tree_of(h.obj), item_key)
+
+    def attest(self, context: bytes = b"",
+               secret: bytes | None = None):
+        """Head attestation: a Merkle commitment (optionally HMAC-signed)
+        to every branch head this engine serves — the light client's
+        trust anchor.  Pair with ``prove_head`` / ``proof.verify_head``."""
+        from ..proof.attest import attest_heads
+        return attest_heads(self.branches, context=context, secret=secret)
+
+    def prove_head(self, key: bytes, branch: str | None = None, *,
+                   uid: bytes | None = None):
+        """Audit path showing one head is committed by ``attest()``.
+        ``branch`` defaults to master (like get); pass ``uid`` for an
+        untagged fork-on-conflict head."""
+        from ..proof.attest import prove_head
+        if branch is None and uid is None:
+            branch = DEFAULT_BRANCH
+        return prove_head(self.branches, _k(key), branch, uid=uid)
+
+    def audit(self, sample: int = 64, seed: int = 0,
+              secret: bytes | None = None):
+        """Self-audit through the stateless verifiers (proof.Auditor)."""
+        from ..proof.audit import Auditor
+        return Auditor(sample=sample, seed=seed).audit_engine(
+            self, secret=secret)
 
 
 def _k(key) -> bytes:

@@ -8,7 +8,7 @@ chain (tamper evidence, §3.2).
 from __future__ import annotations
 
 import struct
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from . import chunk as ck
 
@@ -89,5 +89,19 @@ def make_fobject(store, type_: int, key: bytes, data: bytes,
     return FObject(type_, key, data, base_depth + 1, bases, context, uid)
 
 
-def load_fobject(store, uid: bytes) -> FObject:
-    return FObject.deserialize(store.get(uid), uid)
+def load_fobject(store, uid: bytes, verify: bool = False) -> FObject:
+    """Load a version record; with ``verify`` the meta chunk is re-hashed
+    against the uid (the verify-on-get option, counted in StoreStats),
+    so a corrupted or substituted version can never deserialize."""
+    raw = store.get(uid)
+    if verify:
+        from .chunk import cid_of
+        st = getattr(store, "stats", None)
+        ok = cid_of(raw) == bytes(uid)
+        if st is not None:
+            st.verifies += 1
+            st.verify_failures += 0 if ok else 1
+        if not ok:
+            from ..storage import TamperedChunk
+            raise TamperedChunk(bytes(uid), "Get-Meta")
+    return FObject.deserialize(raw, uid)

@@ -12,9 +12,9 @@ from typing import Callable
 import numpy as np
 
 from . import chunk as ck
-from .fobject import FObject, TINT, TSTRING, TTUPLE, load_fobject
+from .fobject import TINT, load_fobject
 from .postree import POSTree
-from .types import (FBlob, FInt, FList, FMap, FSet, FString, FTuple)
+from .types import (FInt, FMap, FSet)
 
 
 class MergeConflict(Exception):

@@ -35,6 +35,31 @@ from ..storage import WriteBuffer
 SORTED_KINDS = (ck.SET, ck.MAP)
 
 
+# ---------------------------------------------------------------- navigation
+# Deterministic child selection over decoded index entries.  Shared by the
+# tree walks here and by the *stateless* proof verifier (repro.proof):
+# both sides must pick the same child for the same (entries, pos/key), or
+# a genuine proof would fail to verify.
+
+def child_by_pos(entries: list[Entry], pos: int) -> tuple[int, int]:
+    """(child index, items preceding it) for global item position ``pos``
+    within a node whose subtree counts sum over ``pos``; raises IndexError
+    when pos is outside the node (a forged position in a proof)."""
+    base = 0
+    for i, e in enumerate(entries):
+        if pos < base + e.count:
+            return i, base
+        base += e.count
+    raise IndexError(pos)
+
+
+def child_by_key(entries: list[Entry], key: bytes) -> int:
+    """First child whose max key covers ``key`` (clamped to the last child
+    so past-the-end keys resolve to the rightmost leaf, as in find_key)."""
+    ks = [e.key for e in entries]
+    return min(bisect.bisect_left(ks, key), len(entries) - 1)
+
+
 class POSTree:
     def __init__(self, store, kind: int, levels: list[list[Entry]],
                  params: ChunkParams = DEFAULT_PARAMS):
@@ -298,6 +323,32 @@ class POSTree:
                     return v
             return None
         return key if key in ck.unpack_lv_stream(ck.chunk_payload(raw)) else None
+
+    # ------------------------------------------------------- audit paths
+    def audit_path(self, *, pos: int | None = None,
+                   key: bytes | None = None) -> tuple[list[bytes], bytes]:
+        """Membership-proof extraction hook (proof subsystem): the raw
+        chunk chain from the root down to the leaf holding item ``pos``
+        (any kind) or sorted-kind ``key`` — exactly the nodes a stateless
+        verifier needs to recompute the root cid.  Returns
+        (index node raws root-down, leaf raw)."""
+        assert (pos is None) != (key is None)
+        if key is not None:
+            assert self.kind in SORTED_KINDS
+        raw = self._get_raw(self.root_cid)
+        index_raws: list[bytes] = []
+        while ck.chunk_type(raw) in (ck.UINDEX, ck.SINDEX):
+            dec = (ck.decode_sindex if ck.chunk_type(raw) == ck.SINDEX
+                   else ck.decode_uindex)
+            entries = dec(ck.chunk_payload(raw))
+            if pos is not None:
+                child, base = child_by_pos(entries, pos)
+                pos -= base
+            else:
+                child = child_by_key(entries, key)
+            index_raws.append(raw)
+            raw = self._get_raw(entries[child].cid)
+        return index_raws, raw
 
     # ------------------------------------------------------------ commit
     def _rebuild_index(self) -> None:

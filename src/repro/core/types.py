@@ -11,8 +11,6 @@ from __future__ import annotations
 
 import struct
 
-import numpy as np
-
 from . import chunk as ck
 from .chunker import ChunkParams, DEFAULT_PARAMS
 from .fobject import TINT, TSTRING, TTUPLE

@@ -176,6 +176,75 @@ def _pow2(x: int) -> int:
     return 1 << max(0, x - 1).bit_length()
 
 
+# ----------------------------------------------------------- host fallback
+#
+# Off-TPU, pl.pallas_call(interpret=True) is a correctness oracle, not a
+# perf path (~100x slower than hashlib).  The batched entry point instead
+# runs the same sponge as a *vectorized numpy* computation — one array op
+# sweep per block index across every chunk of the bucket — bit-for-bit
+# identical to the kernel (asserted by the conformance test), so cids are
+# stable across hosts and TPUs.
+
+_GOLD_NP = np.uint32(_GOLD)
+
+
+def _host_rotr(x: np.ndarray, r: int) -> np.ndarray:
+    r &= 31
+    if r == 0:
+        return x
+    return (x >> np.uint32(r)) | (x << np.uint32(32 - r))
+
+
+def _host_round(state: np.ndarray) -> np.ndarray:
+    state = state * _GOLD_NP
+    state = state ^ _host_rotr(state, 13)
+    state = state + np.roll(state, 1, axis=-1)
+    state = state ^ _host_rotr(state, 7)
+    state = state + np.roll(state, 1, axis=-2)
+    return state
+
+
+def _host_mix32(x: np.ndarray) -> np.ndarray:
+    x = x ^ (x >> np.uint32(16))
+    x = x * np.uint32(_M1)
+    x = x ^ (x >> np.uint32(13))
+    x = x * np.uint32(_M2)
+    return x ^ (x >> np.uint32(16))
+
+
+def _fphash_many_host(blobs: list[bytes], nbs: list[int]) -> list[bytes]:
+    out: list[bytes | None] = [None] * len(blobs)
+    buckets: dict[int, list[int]] = {}
+    for i, nb in enumerate(nbs):
+        buckets.setdefault(nb, []).append(i)
+    init = np.asarray(fp_init_state(), dtype=np.uint32)
+    with np.errstate(over="ignore"):
+        for nb, idx in buckets.items():
+            m = len(idx)
+            buf = np.zeros((m, nb * FP_BLOCK_WORDS * 4), dtype=np.uint8)
+            for r, i in enumerate(idx):
+                buf[r, :len(blobs[i])] = np.frombuffer(blobs[i],
+                                                       dtype=np.uint8)
+            words = buf.view("<u4").astype(np.uint32).reshape(
+                (m, nb) + FP_STATE)
+            state = np.broadcast_to(init, (m,) + FP_STATE)
+            for b in range(nb):
+                state = state ^ words[:, b]
+                for _ in range(FP_ROUNDS):
+                    state = _host_round(state)
+            lens = np.asarray([len(blobs[i]) & 0xFFFFFFFF for i in idx],
+                              dtype=np.uint32)
+            state = state ^ lens[:, None, None]
+            state = _host_round(_host_round(state))
+            folded = np.bitwise_xor.reduce(state, axis=-1)
+            folded = _host_mix32(
+                folded ^ (np.arange(8, dtype=np.uint32)[None, :] * _GOLD_NP))
+            res = folded.astype("<u4")
+            for r, i in enumerate(idx):
+                out[i] = res[r].tobytes()
+    return out  # type: ignore[return-value]
+
+
 def fphash_many(blobs) -> list[bytes]:
     """Vectorized cid path behind ``core.hashing.content_hash_many``:
     hash a batch of byte strings with one kernel launch per block-count
@@ -184,11 +253,15 @@ def fphash_many(blobs) -> list[bytes]:
     chunk cannot force every row to its width (memory stays O(input
     bytes), not O(n x max)), and batch counts round up to powers of two,
     bounding jit retraces to O(log^2) shape buckets.  The kernel masks
-    per-chunk, so padding never enters a digest."""
+    per-chunk, so padding never enters a digest.  Without a TPU the same
+    sponge runs as one vectorized numpy sweep per bucket instead of the
+    (much slower) Pallas interpreter — digests are identical either way."""
     blobs = [bytes(b) for b in blobs]
     if not blobs:
         return []
     nbs = [max(1, -(-max(len(b), 1) // (FP_BLOCK_WORDS * 4))) for b in blobs]
+    if _INTERPRET:
+        return _fphash_many_host(blobs, nbs)
     buckets: dict[int, list[int]] = {}
     for i, nb in enumerate(nbs):
         buckets.setdefault(_pow2(nb), []).append(i)

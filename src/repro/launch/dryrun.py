@@ -13,7 +13,6 @@ from functools import partial  # noqa: E402
 from pathlib import Path       # noqa: E402
 
 import jax           # noqa: E402
-import jax.numpy as jnp        # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from ..configs import ARCHS, SHAPES, input_specs, shapes_for  # noqa: E402

@@ -16,7 +16,7 @@ import jax
 
 from ..ckpt import CheckpointStore
 from ..configs import ARCHS, smoke as smoke_cfg
-from ..runtime.controller import FailurePlan, TrainController
+from ..runtime.controller import TrainController
 from ..shardings import Sharding
 from ..train import AdamWConfig, init_train_state, make_train_step
 from ..train.data import SyntheticLM

@@ -17,7 +17,6 @@ cache.
 """
 from __future__ import annotations
 
-import functools
 import math
 
 import jax

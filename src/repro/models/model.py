@@ -20,8 +20,6 @@ the EnCodec token stream directly (single-codebook stand-in).
 """
 from __future__ import annotations
 
-import functools
-from functools import partial
 
 import jax
 import jax.numpy as jnp

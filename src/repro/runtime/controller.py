@@ -19,11 +19,7 @@ Production behaviors, all exercised by tests on CPU-scale configs:
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
-
-import jax
-import numpy as np
 
 from ..ckpt import CheckpointStore
 

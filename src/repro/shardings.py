@@ -20,7 +20,6 @@ Policy (DESIGN.md §6):
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import numpy as np

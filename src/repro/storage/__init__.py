@@ -56,7 +56,8 @@ def make_backend(spec: str = "memory", *, log_path: str | None = None,
             raise ValueError("log backend needs log_path")
         backend = MemoryBackend(log_path=log_path, verify=verify)
     elif base == "sharded":
-        backend = ShardedBackend(shards)
+        backend = ShardedBackend(
+            shards, factory=lambda: MemoryBackend(verify=verify))
     elif base == "replicated":
         backend = ReplicatedBackend([MemoryBackend(verify=verify)
                                      for _ in range(n)], k=k)
@@ -64,7 +65,8 @@ def make_backend(spec: str = "memory", *, log_path: str | None = None,
         raise ValueError(f"unknown base backend: {base!r}")
     for layer in reversed(layers[:-1]):
         if layer == "lru":
-            backend = LRUCacheBackend(backend, capacity_bytes=capacity_bytes)
+            backend = LRUCacheBackend(backend, capacity_bytes=capacity_bytes,
+                                      verify=verify)
         else:
             raise ValueError(f"unknown wrapper layer: {layer!r}")
     return backend

@@ -54,6 +54,8 @@ class StoreStats:
     get_batches: int = 0          # get_many calls
     cache_hits: int = 0           # reads served by a cache layer
     deletes: int = 0              # chunks actually removed (per chunk)
+    verifies: int = 0             # chunk-hash integrity checks performed
+    verify_failures: int = 0      # checks that caught tampering/corruption
     logical_bytes: int = 0        # sum of bytes across all Puts
     physical_bytes: int = 0       # bytes actually stored (post-dedup)
     reclaimed_bytes: int = 0      # physical bytes freed by deletes

@@ -10,12 +10,19 @@ from .backend import (BackendBase, delete_via, overlay_get_many,
 
 
 class LRUCacheBackend(BackendBase):
-    """Write-through LRU over ``inner``, bounded by ``capacity_bytes``."""
+    """Write-through LRU over ``inner``, bounded by ``capacity_bytes``.
 
-    def __init__(self, inner, capacity_bytes: int = 64 << 20):
+    With ``verify=True`` cache HITS are re-hashed before being served:
+    without it a flipped bit in the resident copy would be returned with
+    no integrity check at all, because verified leaf stores only see the
+    misses (the tamper-evidence conformance suite covers this)."""
+
+    def __init__(self, inner, capacity_bytes: int = 64 << 20,
+                 verify: bool = False):
         super().__init__()
         self.inner = inner
         self.capacity_bytes = capacity_bytes
+        self.verify = verify
         self._cache: OrderedDict[bytes, bytes] = OrderedDict()
         self._cache_bytes = 0
 
@@ -49,6 +56,13 @@ class LRUCacheBackend(BackendBase):
         def on_hit(cid):
             self._cache.move_to_end(cid)
             st.cache_hits += 1
+            if self.verify:
+                from ..core.chunk import cid_of
+                st.verifies += 1
+                if cid_of(self._cache[cid]) != cid:
+                    st.verify_failures += 1
+                    from .backend import TamperedChunk
+                    raise TamperedChunk(cid, "cache hit")
 
         return overlay_get_many(self._cache, cids, self.inner.get_many,
                                 on_hit=on_hit, on_fetch=self._admit)

@@ -50,7 +50,9 @@ class MemoryBackend(BackendBase):
             # would just re-hash the same bytes
             from ..core.chunk import cid_of
             for i in provided:
+                self.stats.verifies += 1
                 if out[i] != cid_of(raws[i]):
+                    self.stats.verify_failures += 1
                     raise TamperedChunk(out[i], "Put-Chunk")
         st = self.stats
         st.put_batches += 1
@@ -77,7 +79,9 @@ class MemoryBackend(BackendBase):
                 raise ChunkMissing(cid)
             if self.verify:
                 from ..core.chunk import cid_of
+                st.verifies += 1
                 if cid_of(raw) != cid:
+                    st.verify_failures += 1
                     raise TamperedChunk(cid, "Get-Chunk")
             out.append(raw)
         return out
@@ -132,8 +136,11 @@ class MemoryBackend(BackendBase):
                 raw = f.read(ln)
                 if len(raw) < ln:
                     break  # torn tail write: recover prefix
-                if self.verify and cid_of(raw) != cid:
-                    raise TamperedChunk(cid, "log replay")
+                if self.verify:
+                    self.stats.verifies += 1
+                    if cid_of(raw) != cid:
+                        self.stats.verify_failures += 1
+                        raise TamperedChunk(cid, "log replay")
                 if cid not in self._data:
                     self.stats.physical_bytes += ln
                 self._data[cid] = raw

@@ -99,6 +99,13 @@ class ReplicatedBackend(BackendBase):
     def iter_cids(self):
         return iter(list(self._known))
 
+    def audit(self, sample: int = 64, seed: int = 0):
+        """Sampled cross-replica tamper audit (proof subsystem): every
+        ring copy of each sampled cid must exist and hash back to the
+        cid; returns an ``AuditReport`` naming offending replicas."""
+        from ..proof import Auditor
+        return Auditor(sample=sample, seed=seed).audit_replicas(self)
+
     def __len__(self) -> int:
         return len(self._known)
 

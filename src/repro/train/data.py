@@ -13,7 +13,7 @@ import threading
 
 import jax
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 
 class SyntheticLM:

@@ -8,7 +8,6 @@ FSDP / TP / EP collectives (see shardings.py).
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Any
 

@@ -1,6 +1,4 @@
 """Application-level tests: blockchain, wiki, analytics vs baselines."""
-import numpy as np
-import pytest
 
 from repro.apps import (ColumnTable, ForkBaseLedger, ForkBaseWiki,
                         KVLedger, OrpheusLite, RedisWiki, RowTable)

@@ -2,14 +2,13 @@
 pins, checkpoint retention (prune), cluster-wide collection, and the
 core safety property — GC never collects a chunk reachable from any
 surviving head, under randomized put/fork/merge/remove/prune workloads."""
-import json
 
 import numpy as np
 import pytest
 
-from repro.core import (BranchExists, Cluster, FBlob, FMap, ForkBase,
+from repro.core import (BranchExists, Cluster, FBlob, ForkBase,
                         FString, NoSuchRef)
-from repro.gc import GarbageCollector, PinSet, mark
+from repro.gc import PinSet, mark
 from repro.storage import MemoryBackend
 
 

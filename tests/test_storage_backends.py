@@ -5,7 +5,6 @@ a value with N chunks commits via one put_many batch, and the
 vectorized fphash path matches the per-chunk kernel bit-for-bit.
 The delete/GC cases cover the sweep verb added for garbage collection:
 chunks leave every replica/shard/cache coherently and stats shrink."""
-import numpy as np
 import pytest
 
 from repro.core import Cluster, ForkBase, FBlob, FMap
@@ -318,6 +317,102 @@ def test_compact_without_log_is_noop():
 
 
 # ----------------------------------------------------- tamper detection
+
+@pytest.fixture
+def verified_backend(request, tmp_path):
+    """The same six stacks, with integrity verification enabled in every
+    leaf store (and on the cluster nodes)."""
+    name = request.param
+    vmem = lambda: MemoryBackend(verify=True)  # noqa: E731
+    if name == "memory":
+        return vmem()
+    if name == "log":
+        return MemoryBackend(log_path=str(tmp_path / "chunks.log"),
+                             verify=True)
+    if name == "lru":
+        return LRUCacheBackend(vmem(), capacity_bytes=1 << 20, verify=True)
+    if name == "replicated":
+        return ReplicatedBackend([vmem() for _ in range(3)], k=2)
+    if name == "sharded":
+        return ShardedBackend(4, factory=vmem)
+    if name == "routing":
+        return Cluster(3, verify=True).nodes[0].servlet.store
+    raise AssertionError(name)
+
+
+def _leaf_stores(backend):
+    """Every MemoryBackend a stack bottoms out in."""
+    if isinstance(backend, MemoryBackend):
+        return [backend]
+    if isinstance(backend, LRUCacheBackend):
+        return _leaf_stores(backend.inner)
+    if isinstance(backend, ReplicatedBackend):
+        return [leaf for s in backend.stores for leaf in _leaf_stores(s)]
+    if isinstance(backend, ShardedBackend):
+        return [leaf for s in backend.shards for leaf in _leaf_stores(s)]
+    cluster = getattr(backend, "cluster", None)
+    if cluster is not None:
+        return [leaf for n in cluster.nodes for leaf in _leaf_stores(n.store)]
+    raise AssertionError(type(backend))
+
+
+def _corrupt_everywhere(backend, cid):
+    """Flip one byte in EVERY materialization of ``cid`` — all replicas,
+    the owning shard/node, AND any resident cache copy (a cache must not
+    be a verification hole)."""
+    hit = 0
+    for leaf in _leaf_stores(backend):
+        raw = leaf._data.get(cid)
+        if raw is not None:
+            leaf._data[cid] = raw[:-1] + bytes([raw[-1] ^ 0x55])
+            hit += 1
+    if isinstance(backend, LRUCacheBackend):
+        raw = backend._cache.get(cid)
+        if raw is not None:
+            backend._cache[cid] = raw[:-1] + bytes([raw[-1] ^ 0x55])
+            hit += 1
+    assert hit > 0
+    return hit
+
+
+@pytest.mark.parametrize("verified_backend", BACKENDS, indirect=True)
+def test_corruption_surfaces_tampered_chunk(verified_backend, rng):
+    """Conformance: a flipped byte in a stored raw surfaces TamperedChunk
+    from get/get_many on every backend stack — corruption can never be
+    silently returned to a reader."""
+    be = verified_backend
+    raws = chunks(rng, n=8)
+    cids = be.put_many(raws)
+    assert be.get_many(cids) == raws
+    assert _stack_stat(be, "verifies") > 0      # reads actually verified
+    _corrupt_everywhere(be, cids[2])
+    with pytest.raises(TamperedChunk):
+        be.get_many(cids)
+    with pytest.raises(TamperedChunk):
+        be.get(cids[2])
+    assert _stack_stat(be, "verify_failures") >= 1
+    # untouched chunks still read clean
+    ok = [c for i, c in enumerate(cids) if i != 2]
+    assert be.get_many(ok) == [r for i, r in enumerate(raws) if i != 2]
+
+
+def _stack_stat(be, name):
+    total = sum(getattr(leaf.stats, name) for leaf in _leaf_stores(be))
+    if not isinstance(be, MemoryBackend):
+        total += getattr(be.stats, name)        # cache-layer checks
+    return total
+
+
+@pytest.mark.parametrize("verified_backend", BACKENDS, indirect=True)
+def test_verified_stack_roundtrip_counts_verifies(verified_backend, rng):
+    """StoreStats.verifies ticks on the verify-enabled read path and no
+    failures are recorded for clean data."""
+    be = verified_backend
+    cids = be.put_many(chunks(rng, n=5))
+    be.get_many(cids)
+    assert _stack_stat(be, "verifies") >= 5
+    assert _stack_stat(be, "verify_failures") == 0
+
 
 def test_replay_detects_tampering(tmp_path, rng):
     path = str(tmp_path / "chunks.log")

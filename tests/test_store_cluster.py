@@ -1,7 +1,5 @@
 """Chunk storage durability + replication + cluster rebalancing
 (paper §4.4, §4.6.1)."""
-import numpy as np
-import pytest
 
 from repro.core import ChunkParams, ChunkStore, Cluster, FBlob, ReplicatedStore
 from repro.core.chunk import cid_of, encode_chunk

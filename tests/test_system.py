@@ -2,16 +2,13 @@
 ForkBase engine + typed objects + fork semantics + the training framework
 checkpointing through it."""
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 pytestmark = pytest.mark.slow  # ~minutes of model/train work
 
 from repro.apps import ForkBaseLedger
-from repro.ckpt import CheckpointStore
 from repro.configs import ARCHS, smoke
-from repro.core import ChunkParams, FBlob, FMap, ForkBase
+from repro.core import ChunkParams, FMap, ForkBase
 from repro.runtime import run_resilient
 from repro.shardings import Sharding
 from repro.train import AdamWConfig, init_train_state, make_train_step
