@@ -1,8 +1,12 @@
 """GC & space-reclamation benchmark -> BENCH_gc.json.
 
-Three workloads:
+Four workloads:
   * versioned blobs: N versions on two branches, drop one branch ->
     mark throughput (chunks/s over the live DAG) and sweep reclaim;
+  * incremental GC: the SAME collection run as budget-bounded slices
+    under a mutating workload (a put between every slice) -> max and
+    p99 pause per slice vs. the stop-the-world collect() time — the
+    headline number for serving traffic during collection;
   * log compaction: same store on a log file -> on-disk size
     before/after compact_log;
   * ckpt retention: a simulated training run (small pytree, many steps),
@@ -29,12 +33,13 @@ BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
 
 def _versioned_workload(db, rng, versions=12, size=120_000):
     data = bytearray(rng.bytes(size))
-    db.put("k", FBlob(bytes(data)))
+    db.put("k", FBlob(bytes(data), params=db.params))
     db.fork("k", "master", "scratch")
     for i in range(versions):
         off = int(rng.integers(0, size - 256))
         data[off:off + 256] = rng.bytes(256)
-        db.put("k", FBlob(bytes(data)), "scratch" if i % 2 else "master")
+        db.put("k", FBlob(bytes(data), params=db.params),
+               "scratch" if i % 2 else "master")
 
 
 def run() -> None:
@@ -66,6 +71,53 @@ def run() -> None:
          f"{out['mark_chunks_per_s']:.0f} chunks/s")
     emit("gc_collect", collect_s * 1e6,
          f"swept {report.swept_chunks} ({report.reclaimed_bytes} B)")
+
+    # ---- incremental GC: slice pauses under a mutating workload ----
+    # identical store + garbage as the stop-the-world run above (same
+    # seed), collected in budget-bounded slices with a committer putting
+    # between every slice — the barrier is live, not idle
+    from repro.core import ChunkParams
+    from repro.gc import GCPhase
+    budget = 32
+    inc_params = ChunkParams(q=9)            # 512 B chunks: a real DAG
+    rng_inc = np.random.default_rng(1)
+    dbs = ForkBase(MemoryBackend(), inc_params)   # stop-the-world baseline
+    _versioned_workload(dbs, np.random.default_rng(2), versions=24,
+                        size=400_000)
+    dbs.remove("k", "scratch")
+    t0 = time.perf_counter()
+    stw_report = dbs.gc()
+    stw_s = time.perf_counter() - t0
+    dbi = ForkBase(MemoryBackend(), inc_params)   # incremental, same load
+    _versioned_workload(dbi, np.random.default_rng(2), versions=24,
+                        size=400_000)
+    dbi.remove("k", "scratch")
+    col = dbi.incremental_gc()
+    pauses = []
+    mutations = 0
+    while True:
+        t0 = time.perf_counter()
+        phase = col.step(budget)
+        pauses.append(time.perf_counter() - t0)
+        if phase is GCPhase.DONE:
+            break
+        dbi.put("mut%d" % (mutations % 4),
+                FBlob(rng_inc.bytes(4_000), params=inc_params))
+        mutations += 1
+    assert col.report.swept_chunks == stw_report.swept_chunks
+    p99 = float(np.percentile(pauses, 99))
+    out["inc_budget"] = budget
+    out["inc_slices"] = len(pauses)
+    out["inc_mutations_during_collection"] = mutations
+    out["inc_barriered_chunks"] = col.report.barriered
+    out["inc_swept_chunks"] = col.report.swept_chunks
+    out["stw_collect_us"] = stw_s * 1e6
+    out["inc_max_pause_us"] = max(pauses) * 1e6
+    out["inc_p99_pause_us"] = p99 * 1e6
+    out["inc_total_us"] = sum(pauses) * 1e6
+    out["inc_p99_pause_vs_stw"] = p99 / max(stw_s, 1e-9)
+    emit("gc_incremental_p99_pause", p99 * 1e6,
+         f"{len(pauses)} slices, p99/STW = {p99 / max(stw_s, 1e-9):.1%}")
 
     # ---- log compaction ----
     with tempfile.TemporaryDirectory() as tmp:

@@ -154,7 +154,8 @@ class CheckpointStore:
 
     # -------------------------------------------------------- retention
     def prune(self, branch: str, *, keep_last: int = 1,
-              keep_every: int | None = None, collect: bool = True):
+              keep_every: int | None = None, collect: bool = True,
+              incremental: bool = False, budget: int = 256):
         """Retention policy over a training run: keep the newest
         ``keep_last`` checkpoints plus every ``keep_every``-th step,
         rewrite the branch's manifest chain to exactly those versions
@@ -170,7 +171,13 @@ class CheckpointStore:
         chain is *anchored* on it, so forks keep their full lineage and
         ``lca``/``merge`` across related runs still find the common
         ancestor.  Pinned uids (``hold``) survive regardless of the
-        policy."""
+        policy.
+
+        ``incremental=True`` drives the collection through
+        ``gc.IncrementalCollector`` in ``budget``-bounded slices, so a
+        retention pass on a live training run never stalls committers
+        for a full-DAG mark (checkpoint manifests are traced through
+        the ``manifest_refs`` hook either way)."""
         head = self.db.get(self.key, branch)
         if head is None:
             from ..core import NoSuchRef
@@ -200,7 +207,8 @@ class CheckpointStore:
             kept = [mapping[u] for u in keep]
         else:
             kept = []                             # head itself is shared
-        return kept, (self.db.gc() if collect else None)
+        return kept, (self.db.gc(incremental=incremental, budget=budget)
+                      if collect else None)
 
     def _reachable_versions(self, heads) -> set[bytes]:
         """Meta-level reachability (bases chains only) from ``heads`` —

@@ -108,6 +108,7 @@ class _RoutingStore(BackendBase):
             n.stats.chunk_bytes += new_bytes
             for cid in cs:
                 self.cluster.index[cid] = node
+        self._notify_put(out)
         return out
 
     def get_many(self, cids) -> list[bytes]:
@@ -202,20 +203,11 @@ class Cluster:
         return self.servlet_of(key).remove(key, branch)
 
     # ---- garbage collection (cluster-wide) ----
-    def gc(self, pins=None, extra_roots=(), extra_hooks=()):
-        """Cluster mark-and-sweep: the dispatcher unions every servlet's
-        TB/UB heads (plus servlet pin sets, optional extra ``pins``, and
-        any caller-supplied ``extra_roots``/``extra_hooks`` — e.g. an
-        external ForkBase sharing a routing store) into one global root
-        set, marks through the routing store — reads fan out to owning
-        nodes via the master index, one batch per node per BFS level —
-        then sweeps each node's *own* chunk store and the master index.
-        The sweep deliberately bypasses the per-servlet routing-store
-        stats: those count what each servlet wrote, and a chunk's writer
-        is not recorded, so debiting any one servlet would skew its
-        counters; physical reclamation shows up in the node stores'
-        stats and the per-node placement counters."""
-        from ..gc import GCReport, GarbageCollector
+    def _gc_roots_hooks(self, pins, extra_roots, extra_hooks):
+        """Global root-set snapshot: union every servlet's TB/UB heads
+        (branch-table copy per servlet) plus servlet pin sets, optional
+        extra ``pins``, and caller-supplied roots/hooks — e.g. an
+        external ForkBase sharing a routing store."""
         roots: set[bytes] = set(extra_roots)
         hooks: list = list(extra_hooks)
         for node in self.nodes:
@@ -225,6 +217,30 @@ class Cluster:
                          if h not in hooks)
         if pins is not None:
             roots |= pins.uids()
+        return roots, hooks
+
+    def gc(self, pins=None, extra_roots=(), extra_hooks=(), *,
+           incremental: bool = False, budget: int = 256):
+        """Cluster mark-and-sweep: the dispatcher unions every servlet's
+        TB/UB heads (plus servlet pin sets, optional extra ``pins``, and
+        any caller-supplied ``extra_roots``/``extra_hooks`` — e.g. an
+        external ForkBase sharing a routing store) into one global root
+        set, marks through the routing store — reads fan out to owning
+        nodes via the master index, one batch per node per BFS level —
+        then sweeps each node's *own* chunk store and the master index.
+        ``incremental=True`` runs the same collection as an epoch of
+        ``budget``-bounded slices (see ``incremental_gc``).
+        The sweep deliberately bypasses the per-servlet routing-store
+        stats: those count what each servlet wrote, and a chunk's writer
+        is not recorded, so debiting any one servlet would skew its
+        counters; physical reclamation shows up in the node stores'
+        stats and the per-node placement counters."""
+        from ..gc import GCReport, GarbageCollector
+        if incremental:
+            return self.incremental_gc(
+                pins=pins, extra_roots=extra_roots,
+                extra_hooks=extra_hooks).collect(budget)
+        roots, hooks = self._gc_roots_hooks(pins, extra_roots, extra_hooks)
         gc = GarbageCollector(self.nodes[0].servlet.store,
                               extra_roots=roots, ref_hooks=hooks)
         live, rounds, missing = gc.mark()
@@ -238,9 +254,60 @@ class Cluster:
             swept += n
             reclaimed += freed
             self.nodes[ni].store.flush()  # durable tombstones if logged
+        self._rebase_build_work()
         return GCReport(roots=len(roots), live_chunks=len(live),
                         swept_chunks=swept, reclaimed_bytes=reclaimed,
                         mark_rounds=rounds, missing_roots=missing)
+
+    def incremental_gc(self, pins=None, extra_roots=(), extra_hooks=()):
+        """Begin a cluster-wide incremental collection epoch and return
+        its ``gc.IncrementalCollector`` (already in MARK).  The root set
+        is an epoch-numbered snapshot — one branch-table copy per
+        servlet taken here — so servlets keep committing during the
+        distributed mark; write barriers are installed on EVERY
+        servlet's routing store, and the sweep fans out per owning node
+        in budget-bounded slices via the master index."""
+        from ..gc import IncrementalCollector
+        roots, hooks = self._gc_roots_hooks(pins, extra_roots, extra_hooks)
+        col = IncrementalCollector(
+            self.nodes[0].servlet.store, extra_roots=roots,
+            ref_hooks=hooks,
+            barrier_stores=[n.servlet.store for n in self.nodes],
+            inventory_fn=lambda: list(self.index),
+            sweep_fn=self._sweep_slice,
+            flush_fn=self._flush_nodes,
+            on_done=lambda report: self._rebase_build_work())
+        col.begin()
+        for node in self.nodes:      # fork-from-uid / pin root barriers
+            node.servlet._track_collector(col)
+        return col
+
+    def _sweep_slice(self, cids) -> tuple[int, int]:
+        """One bounded sweep slice, fanned out per owning node."""
+        by_node: dict[int, list[bytes]] = {}
+        for cid in cids:
+            ni = self.index.get(cid)
+            if ni is not None:
+                by_node.setdefault(ni, []).append(cid)
+        swept = freed = 0
+        for ni, cs in by_node.items():
+            n, f = _delete_on_node(self, ni, sorted(cs))
+            swept += n
+            freed += f
+        return swept, freed
+
+    def _flush_nodes(self) -> None:
+        for node in self.nodes:
+            node.store.flush()       # durable tombstones if logged
+
+    def _rebase_build_work(self) -> None:
+        """GC-aware rebalancing (ROADMAP): after a collection, re-anchor
+        the construction-pressure counters on the post-GC LIVE byte
+        distribution instead of gross bytes ever written — a node whose
+        data was mostly collected must stop repelling new construction
+        work, and a node dense with live chunks must keep delegating."""
+        for n in self.nodes:
+            n.stats.build_work = max(0, n.stats.chunk_bytes)
 
     # ---- audit RPC verbs (proof subsystem) ----
     def attest(self, context: bytes = b"", secret: bytes | None = None):

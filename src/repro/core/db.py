@@ -97,13 +97,18 @@ class ForkBase:
         self.verify_get = verify_get
         self.branches = BranchTable()
         # explicit GC roots: in-flight readers / retention holds pin the
-        # uids they need across a concurrent collect()
+        # uids they need across a concurrent collect(); pinning mid-
+        # collection fires the incremental root barrier
         from ..gc.pins import PinSet
-        self.pins = PinSet()
+        self.pins = PinSet(on_pin=self._gc_root_barrier)
         # application-level link extractors (gc.mark ref_hooks): layers
         # that embed cids inside opaque values (ckpt manifests) register
         # here so gc() can trace through them
         self.gc_hooks: list = []
+        # in-flight incremental collections this engine must barrier for
+        # (store-level put barriers are installed by the collector; this
+        # registry carries the *root* barrier: fork-from-uid, new pins)
+        self.gc_collectors: list = []
 
     # ------------------------------------------------------------- put
     def _commit_value(self, value, store=None) -> tuple[int, bytes]:
@@ -185,6 +190,9 @@ class ForkBase:
         if uid is None or (not isinstance(ref, str)
                            and not self.store.has(uid)):
             raise NoSuchRef(ref)   # a dangling tag would poison GC roots
+        # root barrier: tagging an arbitrary uid mid-collection re-roots
+        # its subgraph — it must be shaded (mark) or rescued (sweep)
+        self._gc_root_barrier(uid)
         self.branches.fork(key, new_branch, uid)
 
     def rename(self, key: bytes, old: str, new: str) -> None:   # M13
@@ -194,11 +202,18 @@ class ForkBase:
         self.branches.remove(_k(key), branch)
 
     # ---------------------------------------------------- space reclaim
-    def gc(self, *, extra_roots: Iterable[bytes] = ()):
+    def gc(self, *, extra_roots: Iterable[bytes] = (),
+           incremental: bool = False, budget: int = 256):
         """Mark-and-sweep: everything reachable from the TB/UB heads of
         every key (plus ``self.pins`` and ``extra_roots``) survives; the
         rest is removed via the backend's ``delete_many``.  Returns a
         ``gc.GCReport``.
+
+        ``incremental=True`` runs the same collection as a tri-color
+        epoch in ``budget``-bounded slices (``gc.IncrementalCollector``)
+        — every pause is O(budget) chunks instead of O(DAG); use
+        ``incremental_gc()`` to interleave the slices with your own
+        traffic.
 
         When the store is a cluster routing store, its sweep inventory
         spans the WHOLE cluster — so the collection must be the
@@ -213,11 +228,56 @@ class ForkBase:
         if cluster is not None:
             roots = (set(extra_roots) | self.branches.all_heads()
                      | self.pins.uids())
-            return cluster.gc(extra_roots=roots,
-                              extra_hooks=self.gc_hooks)
+            return cluster.gc(extra_roots=roots, extra_hooks=self.gc_hooks,
+                              incremental=incremental, budget=budget)
+        if incremental:
+            return self.incremental_gc(extra_roots=extra_roots).collect(
+                budget)
         return GarbageCollector(self.store, branches=self.branches,
                                 pins=self.pins, extra_roots=extra_roots,
                                 ref_hooks=self.gc_hooks).collect()
+
+    def incremental_gc(self, *, extra_roots: Iterable[bytes] = ()):
+        """Begin an incremental collection epoch and return its
+        ``gc.IncrementalCollector`` (already in MARK, barriers
+        installed): interleave ``step(budget)`` with your own commits;
+        every put/merge/fork/pin in between is barriered, so no chunk
+        reachable from any head or pin is ever swept.  On a cluster
+        routing store this is the cluster's collection (see ``gc``)."""
+        from ..gc import IncrementalCollector
+        cluster = getattr(self.store, "cluster", None)
+        if cluster is not None:
+            roots = (set(extra_roots) | self.branches.all_heads()
+                     | self.pins.uids())
+            col = cluster.incremental_gc(extra_roots=roots,
+                                         extra_hooks=self.gc_hooks)
+            # an external engine sharing a routing store is a committer
+            # too: its fork-from-uid / pin root barriers must reach the
+            # cluster's collection (servlets are registered by Cluster)
+            self._track_collector(col)
+            return col
+        col = IncrementalCollector(self.store, branches=self.branches,
+                                   pins=self.pins, extra_roots=extra_roots,
+                                   ref_hooks=self.gc_hooks)
+        col.begin()
+        self._track_collector(col)
+        return col
+
+    def _track_collector(self, col) -> None:
+        """Register an in-flight collection for root barriers, dropping
+        finished epochs so back-to-back collections don't accumulate."""
+        self.gc_collectors = [c for c in self.gc_collectors
+                              if c.active and c is not col]
+        self.gc_collectors.append(col)
+
+    def _gc_root_barrier(self, uid: bytes) -> None:
+        """Forward a re-rooting event (fork-from-uid, new pin) to every
+        in-flight incremental collection; finished ones drop out."""
+        if not self.gc_collectors:
+            return
+        self.gc_collectors = [c for c in self.gc_collectors if c.active]
+        for c in self.gc_collectors:
+            c.root_barrier(uid)
 
     def truncate_history(self, key: bytes, branch: str,
                          keep_uids: "list[bytes]",

@@ -1,15 +1,24 @@
 """Chunk garbage collection & space reclamation.
 
-  GarbageCollector  reachability mark-and-sweep over the version DAG
-  GCReport          what one collection did (roots/live/swept/bytes)
-  PinSet            explicit roots: in-flight readers, retention holds
+  GarbageCollector      stop-the-world mark-and-sweep over the version DAG
+  IncrementalCollector  tri-color mark/sweep in budget-bounded slices,
+                        safe beside live traffic (write barriers +
+                        epoch root-set snapshot)
+  GCPhase               the incremental state machine's phase enum
+  GCReport              what one collection did (roots/live/swept/bytes)
+  PinSet                explicit roots: in-flight readers, retention holds
 
-Entry points: ``ForkBase.gc()`` (embedded engine), ``Cluster.gc()``
+Entry points: ``ForkBase.gc()`` / ``ForkBase.incremental_gc()``
+(embedded engine), ``Cluster.gc()`` / ``Cluster.incremental_gc()``
 (global root set at the dispatcher, per-node sweep),
 ``CheckpointStore.prune`` (retention policy that drives collection),
 ``MemoryBackend.compact_log`` (on-disk reclamation).
 """
-from .collector import GarbageCollector, GCReport, chunk_refs, mark
+from .collector import (GarbageCollector, GCReport, chunk_refs,
+                        expand_refs, filter_roots, mark)
+from .incremental import GCPhase, IncrementalCollector
 from .pins import PinSet
 
-__all__ = ["GarbageCollector", "GCReport", "PinSet", "chunk_refs", "mark"]
+__all__ = ["GarbageCollector", "GCPhase", "GCReport",
+           "IncrementalCollector", "PinSet", "chunk_refs", "expand_refs",
+           "filter_roots", "mark"]

@@ -37,14 +37,19 @@ class GCReport:
     reclaimed_bytes: int = 0      # physical bytes freed by the sweep
     mark_rounds: int = 0          # store round-trips (= DAG depth levels)
     missing_roots: int = 0        # dangling tags/pins skipped by the mark
+    epoch: int = 0                # incremental collection epoch (0 = STW)
+    slices: int = 0               # step() calls an incremental run took
+    barriered: int = 0            # chunks shaded/rescued by write barriers
 
     def __str__(self) -> str:
         dangling = (f", {self.missing_roots} dangling roots"
                     if self.missing_roots else "")
+        inc = (f" [epoch {self.epoch}: {self.slices} slices, "
+               f"{self.barriered} barriered]" if self.epoch else "")
         return (f"GC: {self.roots} roots, {self.live_chunks} live, "
                 f"{self.swept_chunks} swept "
                 f"({self.reclaimed_bytes / 1e6:.2f} MB) "
-                f"in {self.mark_rounds} mark rounds{dangling}")
+                f"in {self.mark_rounds} mark rounds{dangling}{inc}")
 
 
 def chunk_refs(raw: bytes) -> list[bytes]:
@@ -67,46 +72,56 @@ def chunk_refs(raw: bytes) -> list[bytes]:
     return []                            # leaf chunk: terminal
 
 
-def mark(store, roots, ref_hooks=()) -> tuple[set[bytes], int, int]:
-    """Batched reachability: returns (live cid set, store round-trips,
-    count of missing roots).
+def expand_refs(store, cids, ref_hooks, live) -> list[bytes]:
+    """One mark slice: read ``cids`` (one batched ``get_many``) and
+    return their not-yet-seen references, adding them to ``live``.
 
-    Roots come from user-controllable surfaces (tags, pins), so a
-    dangling one must not brick collection forever: missing roots are
-    filtered with one ``has_many`` and reported, not raised.
+    This is the shared inner loop of both collectors: ``mark`` feeds it
+    whole BFS frontiers, the incremental collector feeds it
+    budget-bounded slices of the gray queue.  Structural refs
+    (``chunk_refs``) are strict — a missing one is corruption and raises
+    ChunkMissing on the next slice; ``ref_hooks`` refs are soft and
+    validated with one batched ``has_many``, so a value that merely
+    looks like a cid cannot abort the mark."""
+    nxt: list[bytes] = []
+    soft: list[bytes] = []
+    for raw in store.get_many(cids):
+        for ref in chunk_refs(raw):
+            if ref not in live:
+                live.add(ref)
+                nxt.append(ref)
+        for hook in ref_hooks:
+            for ref in hook(raw):
+                if ref not in live:
+                    soft.append(ref)
+    if soft:
+        soft = sorted(set(soft) - live)
+        for ref, present in zip(soft, store.has_many(soft)):
+            if present:
+                live.add(ref)
+                nxt.append(ref)
+    return nxt
 
-    ``ref_hooks`` extend the edge function for *application-level* links
-    — values that embed cids the chunk format can't expose (e.g. a
-    checkpoint manifest storing tensor-tree roots inside JSON).  Hook
-    refs are soft: they are validated against the store with one batched
-    ``has_many`` per level, so a value that merely looks like a cid
-    cannot abort the mark; structural refs stay strict (a missing one is
-    corruption and raises ChunkMissing)."""
+
+def filter_roots(store, roots) -> tuple[list[bytes], int]:
+    """Drop dangling roots with one batched ``has_many``: roots come
+    from user-controllable surfaces (tags, pins), so a stale one must
+    not brick collection forever — it is reported, not raised.  Returns
+    (present roots, missing count)."""
     want = sorted({bytes(u) for u in roots})
     frontier = [u for u, p in zip(want, store.has_many(want)) if p]
-    missing = len(want) - len(frontier)
+    return frontier, len(want) - len(frontier)
+
+
+def mark(store, roots, ref_hooks=()) -> tuple[set[bytes], int, int]:
+    """Batched reachability: returns (live cid set, store round-trips,
+    count of missing roots)."""
+    frontier, missing = filter_roots(store, roots)
     live: set[bytes] = set(frontier)
     rounds = 0
     while frontier:
         rounds += 1
-        nxt: list[bytes] = []
-        soft: list[bytes] = []
-        for raw in store.get_many(frontier):
-            for ref in chunk_refs(raw):
-                if ref not in live:
-                    live.add(ref)
-                    nxt.append(ref)
-            for hook in ref_hooks:
-                for ref in hook(raw):
-                    if ref not in live:
-                        soft.append(ref)
-        if soft:
-            soft = sorted(set(soft) - live)
-            for ref, present in zip(soft, store.has_many(soft)):
-                if present:
-                    live.add(ref)
-                    nxt.append(ref)
-        frontier = nxt
+        frontier = expand_refs(store, frontier, ref_hooks, live)
     return live, rounds, missing
 
 

@@ -1,0 +1,265 @@
+"""Incremental concurrent GC — tri-color mark-and-sweep as a resumable
+state machine, safe beside live traffic (ROADMAP "concurrent /
+incremental GC"; ForkBase §4 makes this tractable because chunks are
+immutable and content-addressed: only the root set races).
+
+Phases of one collection epoch:
+
+  begin   epoch-numbered root-set SNAPSHOT: the branch tables (and pin
+          sets) are copied once; committers keep moving afterwards.
+          Write barriers are installed on every store the mutators
+          write through.
+  MARK    tri-color: the snapshot roots start gray; ``step(budget)``
+          pops at most ``budget`` gray cids, reads them with ONE
+          ``get_many`` and grays their unseen references (shared inner
+          loop ``collector.expand_refs``).  Black = shaded and
+          processed; white = never shaded.
+  SWEEP   when the gray queue drains, the condemned set is frozen as
+          inventory minus shaded; ``step(budget)`` deletes at most
+          ``budget`` condemned cids per call (``delete_many`` slices —
+          per owning node in the cluster).  The final slice flushes so
+          log tombstones are durable.
+
+Write barrier (the safety argument):
+
+  * MARK: every put batch — dedup acks included — is shaded gray.  A
+    new version's meta/tree chunks are therefore traversed, which also
+    re-marks any *existing* white chunk the new value adopted by dedup
+    or by structural reference; anything reachable from a post-snapshot
+    head is reachable from shaded chunks or from snapshot roots.
+  * SWEEP: marking is over, so a put batch is *rescued* instead — its
+    cids leave the condemned set before their slice is deleted.  A cid
+    already swept is simply re-stored by the put (content addressing
+    makes re-put identity-safe).  Chunks first stored during the sweep
+    are not in the frozen inventory and cannot be condemned at all.
+  * Root barrier (``fork`` from an explicit uid, new pins): during MARK
+    the uid is shaded; during SWEEP it is rescued *transitively* through
+    the condemned set, because re-rooting a detached subgraph must
+    resurrect all of it, not just the head chunk.
+
+Chunks condemned by the snapshot but re-abandoned mid-collection are
+floating garbage: they survive this epoch and fall in the next — the
+standard snapshot-at-the-beginning trade, never unsafe.
+"""
+from __future__ import annotations
+
+from collections import deque
+from enum import Enum
+
+from .collector import GCReport, chunk_refs, expand_refs, filter_roots
+from .pins import PinSet
+
+
+class GCPhase(Enum):
+    IDLE = "idle"      # no collection in flight
+    MARK = "mark"      # draining the gray queue in budget slices
+    SWEEP = "sweep"    # deleting the condemned set in budget slices
+    DONE = "done"      # report final; begin() starts the next epoch
+
+    def __str__(self) -> str:  # pragma: no cover - repr sugar
+        return self.value
+
+
+class IncrementalCollector:
+    """Resumable collector over one store.  ``begin()`` snapshots the
+    roots and installs write barriers; ``step(budget)`` advances the
+    mark or sweep by at most ``budget`` chunks and returns the phase;
+    ``collect(budget)`` drives a whole epoch to DONE.
+
+    The cluster dispatcher parameterizes the fan-out points:
+    ``barrier_stores`` (every store committers write through),
+    ``inventory_fn`` (the sweep inventory snapshot) and ``sweep_fn``
+    (slice deletion, per owning node) — the state machine itself is
+    shared between the embedded engine and the cluster.
+    """
+
+    def __init__(self, store, branches=None, pins: PinSet | None = None,
+                 extra_roots=(), ref_hooks=(), *, barrier_stores=None,
+                 inventory_fn=None, sweep_fn=None, flush_fn=None,
+                 on_done=None):
+        self.store = store
+        self.branches = branches
+        self.pins = pins
+        self.extra_roots = set(bytes(u) for u in extra_roots)
+        self.ref_hooks = tuple(ref_hooks)
+        self._barrier_stores = (list(barrier_stores)
+                                if barrier_stores is not None else [store])
+        self._inventory_fn = (inventory_fn if inventory_fn is not None
+                              else lambda: self.store.iter_cids())
+        self._sweep_fn = (sweep_fn if sweep_fn is not None
+                          else self._sweep_slice)
+        self._flush_fn = (flush_fn if flush_fn is not None
+                          else self.store.flush)
+        self._on_done = on_done
+        self.phase = GCPhase.IDLE
+        self.epoch = 0
+        self.report: GCReport | None = None
+        self._shaded: set[bytes] = set()        # gray or black (tri-color)
+        self._gray: deque[bytes] = deque()
+        self._condemned: deque[bytes] = deque()
+        self._condemned_set: set[bytes] = set()
+
+    # ------------------------------------------------------------ state
+    @property
+    def active(self) -> bool:
+        return self.phase in (GCPhase.MARK, GCPhase.SWEEP)
+
+    @property
+    def marked(self) -> frozenset:
+        """The shaded (gray + black) cid set — live this epoch.  Freed
+        at DONE (``report.live_chunks`` keeps the count); empty between
+        epochs."""
+        return frozenset(self._shaded)
+
+    # ------------------------------------------------------------ begin
+    def begin(self, extra_roots=()) -> int:
+        """Snapshot the root set, install the write barriers and enter
+        MARK.  Returns the new epoch number.  The snapshot is a copy:
+        branch tables may change freely afterwards (removed heads stay
+        live this epoch — floating garbage, collected next epoch)."""
+        if self.active:
+            raise RuntimeError(
+                f"collection already in flight (epoch {self.epoch}, "
+                f"phase {self.phase})")
+        roots = set(self.extra_roots) | set(bytes(u) for u in extra_roots)
+        if self.branches is not None:
+            roots |= self.branches.all_heads()      # branch-table copy
+        if self.pins is not None:
+            roots |= self.pins.uids()
+        frontier, missing = filter_roots(self.store, roots)
+        self.epoch += 1
+        self.report = GCReport(roots=len(roots), missing_roots=missing,
+                               epoch=self.epoch)
+        self._shaded = set(frontier)
+        self._gray = deque(frontier)
+        self._condemned = deque()
+        self._condemned_set = set()
+        for s in self._barrier_stores:
+            s.add_put_listener(self._put_barrier)
+        self.phase = GCPhase.MARK
+        return self.epoch
+
+    # ---------------------------------------------------------- barrier
+    def _put_barrier(self, cids) -> None:
+        """Store-level write barrier: fires on every put batch (ForkBase
+        put/merge/truncate_history, WriteBuffer flush) of every store
+        this collection watches."""
+        if self.phase is GCPhase.MARK:
+            for c in cids:
+                if c not in self._shaded:
+                    self._shaded.add(c)
+                    self._gray.append(c)
+                    self.report.barriered += 1
+        elif self.phase is GCPhase.SWEEP:
+            for c in cids:
+                if c in self._condemned_set:
+                    self._condemned_set.discard(c)
+                    self.report.barriered += 1
+
+    def root_barrier(self, uid: bytes) -> None:
+        """Re-rooting barrier: a mutator just made ``uid`` a root (fork
+        from an explicit uid, a new pin).  During MARK shading it is
+        enough — the mark traverses from it; during SWEEP the rescue is
+        transitive through the condemned set, because marking is over
+        and a re-rooted detached subgraph must ALL survive."""
+        if not self.active:
+            return
+        uid = bytes(uid)
+        if self.phase is GCPhase.MARK:
+            self._put_barrier([uid] if self.store.has(uid) else [])
+            return
+        if uid not in self._condemned_set:
+            return                   # black, already rescued, or swept
+        frontier = [uid]
+        while frontier:
+            for c in frontier:
+                self._condemned_set.discard(c)
+            self.report.barriered += len(frontier)
+            present = [c for c, p in zip(frontier,
+                                         self.store.has_many(frontier))
+                       if p]
+            nxt: list[bytes] = []
+            for raw in self.store.get_many(present):
+                refs = list(chunk_refs(raw))
+                for hook in self.ref_hooks:   # app-level links too (a
+                    refs.extend(hook(raw))    # ckpt manifest's tensor
+                nxt.extend(r for r in refs    # roots live through hooks)
+                           if r in self._condemned_set)
+            frontier = sorted(set(nxt))
+
+    # ------------------------------------------------------------- step
+    def step(self, budget: int = 256) -> GCPhase:
+        """Advance the collection by at most ``budget`` chunks (marked
+        OR swept — one bounded pause) and return the phase.  The
+        MARK->SWEEP transition step freezes the condemned set without
+        deleting anything, so a slice never exceeds its budget."""
+        if budget < 1:
+            raise ValueError(f"budget must be >= 1, got {budget}")
+        if not self.active:
+            return self.phase
+        self.report.slices += 1
+        if self.phase is GCPhase.MARK:
+            if self._gray:
+                self.report.mark_rounds += 1
+                batch = [self._gray.popleft()
+                         for _ in range(min(budget, len(self._gray)))]
+                self._gray.extend(
+                    expand_refs(self.store, batch, self.ref_hooks,
+                                self._shaded))
+            if not self._gray:
+                self._freeze_condemned()
+            return self.phase
+        # SWEEP: delete up to ``budget`` still-condemned cids
+        batch: list[bytes] = []
+        while self._condemned and len(batch) < budget:
+            c = self._condemned.popleft()
+            if c in self._condemned_set:          # not rescued meanwhile
+                self._condemned_set.discard(c)
+                batch.append(c)
+        if batch:
+            n, freed = self._sweep_fn(sorted(batch))
+            self.report.swept_chunks += n
+            self.report.reclaimed_bytes += freed
+        if not self._condemned:
+            self._finish()
+        return self.phase
+
+    def collect(self, budget: int = 256) -> GCReport:
+        """Drive one whole epoch: begin (if idle) and step to DONE."""
+        if not self.active:
+            self.begin()
+        while self.step(budget) is not GCPhase.DONE:
+            pass
+        return self.report
+
+    # ---------------------------------------------------------- internal
+    def _freeze_condemned(self) -> None:
+        """Gray queue drained: freeze inventory-minus-shaded as the
+        condemned set and enter SWEEP.  Chunks put after this instant
+        are absent from the frozen inventory and can never be swept."""
+        self.report.live_chunks = len(self._shaded)
+        cond = sorted(c for c in self._inventory_fn()
+                      if c not in self._shaded)
+        self._condemned = deque(cond)
+        self._condemned_set = set(cond)
+        self.phase = GCPhase.SWEEP
+        if not self._condemned:
+            self._finish()
+
+    def _sweep_slice(self, cids) -> tuple[int, int]:
+        r0 = self.store.stats.reclaimed_bytes
+        n = self.store.delete_many(cids)
+        return n, self.store.stats.reclaimed_bytes - r0
+
+    def _finish(self) -> None:
+        for s in self._barrier_stores:
+            s.remove_put_listener(self._put_barrier)
+        if self.report.swept_chunks:
+            self._flush_fn()         # durable tombstones, like collect()
+        self._gray.clear()
+        self._condemned.clear()
+        self._condemned_set = set()
+        self._shaded = set()         # O(live) memory is the epoch's, not ours
+        self.phase = GCPhase.DONE
+        if self._on_done is not None:
+            self._on_done(self.report)

@@ -16,12 +16,18 @@ from contextlib import contextmanager
 
 
 class PinSet:
-    def __init__(self):
+    def __init__(self, on_pin=None):
         self._refs: Counter[bytes] = Counter()
+        # root barrier for incremental GC: pinning a detached uid while
+        # a collection is in flight must shade/rescue it (the engine
+        # wires this to its active collectors)
+        self.on_pin = on_pin
 
     def pin(self, *uids: bytes) -> None:
         for u in uids:
             self._refs[bytes(u)] += 1
+            if self.on_pin is not None:
+                self.on_pin(bytes(u))
 
     def unpin(self, *uids: bytes) -> None:
         for u in uids:

@@ -217,10 +217,30 @@ def put_via(stats: StoreStats, child, raws: Sequence[bytes],
 
 
 class BackendBase:
-    """Common plumbing: stats + singular ops as batches of one."""
+    """Common plumbing: stats + singular ops as batches of one, plus the
+    put-notification hook every backend fires for the GC write barrier."""
 
     def __init__(self) -> None:
         self.stats = StoreStats()
+        self._put_listeners: list = []
+
+    # ---- GC write barrier (incremental collection) ----
+    def add_put_listener(self, fn) -> None:
+        """Register ``fn(cids)`` to fire after every put batch lands.
+        Dedup acks are included: a put that merely re-references an
+        existing chunk must still shade it, or an in-flight collection
+        could sweep a chunk a brand-new version just adopted."""
+        self._put_listeners.append(fn)
+
+    def remove_put_listener(self, fn) -> None:
+        try:
+            self._put_listeners.remove(fn)
+        except ValueError:
+            pass
+
+    def _notify_put(self, cids) -> None:
+        for fn in list(self._put_listeners):
+            fn(cids)
 
     def put(self, raw: bytes, cid: bytes | None = None) -> bytes:
         return self.put_many([raw], [cid])[0]

@@ -38,7 +38,9 @@ class WriteBuffer(BackendBase):
     def put_many(self, raws, cids=None) -> list[bytes]:
         raws = [bytes(r) for r in raws]
         if self._closed:
-            return self.inner.put_many(raws, cids)
+            out = self.inner.put_many(raws, cids)
+            self._notify_put(out)
+            return out
         out = resolve_cids(raws, cids)
         st = self.stats
         st.put_batches += 1
@@ -50,6 +52,10 @@ class WriteBuffer(BackendBase):
             # flush still replays the full logical stream for stats
             self._raws.append(self._pending.setdefault(cid, raw))
             self._cids.append(cid)
+        # a buffered put is not yet durable, but it IS visible to reads,
+        # so a listener attached to the buffer hears about it now; the
+        # inner store's listeners fire on flush (the real commit)
+        self._notify_put(out)
         return out
 
     def get_many(self, cids) -> list[bytes]:

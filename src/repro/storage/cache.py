@@ -46,6 +46,7 @@ class LRUCacheBackend(BackendBase):
             st.puts += 1
             st.logical_bytes += len(raw)
             self._admit(cid, raw)
+        self._notify_put(out)
         return out
 
     def get_many(self, cids) -> list[bytes]:

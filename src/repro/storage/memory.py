@@ -66,6 +66,7 @@ class MemoryBackend(BackendBase):
             st.physical_bytes += len(raw)
             if self._log is not None:
                 self._log.write(cid + _LEN.pack(len(raw)) + raw)
+        self._notify_put(out)
         return out
 
     def get_many(self, cids) -> list[bytes]:

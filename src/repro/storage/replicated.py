@@ -41,6 +41,7 @@ class ReplicatedBackend(BackendBase):
         for si, (rs, cs) in groups.items():
             # dedup counted once via _known, not per replica copy
             put_via(st, self.stores[si], rs, cs, count_dedup=False)
+        self._notify_put(out)
         return out
 
     def get_many(self, cids) -> list[bytes]:

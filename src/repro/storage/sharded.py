@@ -31,6 +31,7 @@ class ShardedBackend(BackendBase):
         for si, (_, cs, rs) in group_by(lambda i, c: self._owner(c),
                                         out, raws).items():
             put_via(st, self.shards[si], rs, cs)
+        self._notify_put(out)
         return out
 
     def get_many(self, cids) -> list[bytes]:

@@ -337,6 +337,27 @@ def test_single_servlet_gc_is_cluster_safe(rng):
         assert n.servlet.store.stats.physical_bytes >= 0
 
 
+@pytest.mark.parametrize("incremental", [False, True])
+def test_cluster_gc_rebases_build_pressure_on_live_bytes(rng, incremental):
+    """ROADMAP "GC-aware rebalancing": after a collection — incremental
+    or stop-the-world — construction-pressure counters must track the
+    post-GC LIVE byte distribution, not gross bytes ever written; a node
+    whose data was mostly collected stops repelling new work."""
+    from repro.core import ChunkParams
+    cl = Cluster(4, "2LP", ChunkParams(q=8))
+    for i in range(24):                     # one hot key: skewed pressure
+        cl.put("hotkey", FBlob(rng.bytes(30_000)), branch=f"b{i}")
+    gross = sum(cl.build_distribution())
+    for i in range(1, 24):
+        cl.remove("hotkey", f"b{i}")        # most of it becomes garbage
+    report = cl.gc(incremental=incremental, budget=32)
+    assert report.swept_chunks > 0
+    live = [max(0, n.stats.chunk_bytes) for n in cl.nodes]
+    assert cl.build_distribution() == live  # rebased on live placement
+    assert sum(cl.build_distribution()) < gross
+    assert cl.get("hotkey", "b0") is not None
+
+
 # ------------------------------------------------- property: GC is safe
 
 def _surviving_versions(db, key):

@@ -256,6 +256,72 @@ def test_write_buffer_delete_retracts_pending(rng):
     assert not inner.has(cids[2])
 
 
+# ------------------------------------------- write barrier (incremental GC)
+
+
+@all_backends
+def test_put_listener_fires_with_batch_cids(backend, rng):
+    """Conformance: every backend notifies put listeners with the batch
+    cids — dedup acks included (re-referencing an existing chunk must
+    still reach an in-flight collection's barrier)."""
+    heard = []
+    backend.add_put_listener(heard.append)
+    raws = chunks(rng, n=5)
+    cids = backend.put_many(raws)
+    assert heard and heard[-1] == cids
+    n0 = len(heard)
+    backend.put_many(raws)                          # pure dedup batch
+    assert len(heard) > n0 and heard[-1] == cids
+    backend.remove_put_listener(heard.append)
+    backend.put(encode_chunk(3, rng.bytes(64)))
+    assert heard[-1] == cids                        # detached: silent
+
+
+@all_backends
+def test_put_mid_mark_is_shaded_and_survives(backend, rng):
+    """A put landing mid-mark must gray its refs on every backend stack:
+    the new version survives the epoch even though it was not in the
+    root snapshot."""
+    from repro.gc import GCPhase
+    db = ForkBase(backend)
+    keep = rng.bytes(60_000)
+    db.put("k1", FBlob(keep))
+    db.fork("k1", "master", "tmp")
+    db.put("k1", FBlob(rng.bytes(60_000)), "tmp")
+    db.remove("k1", "tmp")                          # garbage to collect
+    col = db.incremental_gc()
+    assert col.step(2) is GCPhase.MARK              # mark in flight
+    fresh = rng.bytes(60_000)
+    uid = db.put("k2", FBlob(fresh))                # put landing mid-mark
+    assert uid in col.marked                        # barrier grayed it
+    while col.step(16) is not GCPhase.DONE:
+        pass
+    assert col.report.swept_chunks > 0
+    assert col.report.barriered > 0
+    assert db.get("k1").blob().read() == keep
+    assert db.get("k2").blob().read() == fresh
+
+
+@all_backends
+def test_dedup_put_mid_sweep_rescues_condemned_chunks(backend, rng):
+    """A put landing mid-sweep that dedups against condemned chunks must
+    rescue them before their slice is deleted — on every stack."""
+    from repro.gc import GCPhase
+    db = ForkBase(backend)
+    data = rng.bytes(60_000)
+    db.put("k", FBlob(data), "tmp")
+    db.remove("k", "tmp")                           # whole value condemned
+    col = db.incremental_gc()
+    while col.step(4) is GCPhase.MARK:
+        pass
+    assert col.phase is GCPhase.SWEEP               # frozen, nothing swept
+    uid = db.put("k", FBlob(data))                  # dedups against condemned
+    assert col.report.barriered > 0                 # rescued, not resurrected
+    while col.step(4) is not GCPhase.DONE:
+        pass
+    assert db.get("k", uid=uid).blob().read() == data
+
+
 # --------------------------------------------------- log: tombstones, compact
 
 def test_log_tombstones_survive_reopen(tmp_path, rng):
