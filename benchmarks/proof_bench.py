@@ -1,6 +1,6 @@
 """Proof subsystem benchmark -> BENCH_proof.json.
 
-Three questions:
+Four questions:
   * proof size: O(log n) — mean membership-proof bytes and heights for
     maps of growing cardinality;
   * prove/verify throughput: per-proof verification (every proof decodes
@@ -9,6 +9,10 @@ Three questions:
     ONE ``content_hash_many`` dispatch and decoded once) — under the
     sha256 host hash and under the ``fphash`` dedup-path hash (one
     Pallas launch per batch on TPU; vectorized host sponge off-TPU);
+  * attest churn: delta attestations (``proof.delta``) vs full
+    re-Merkle-ization after k single-head updates over n heads —
+    hash-CALL counts (O(k log n) leaf/path rehashes vs O(n) rebuild)
+    and wall-clock per attest;
   * verification accounting: StoreStats verifies/verify_failures over a
     verify-enabled store, surfaced in benchmarks/run.py.
 """
@@ -98,6 +102,85 @@ def _throughput(rng) -> dict:
     return res
 
 
+def _counting_hash():
+    """Install a call-counting wrapper around the sha256 default; the
+    counter sees every content_hash/content_hash_many item."""
+    counter = {"calls": 0}
+
+    def one(b):
+        counter["calls"] += 1
+        return hashing.sha256(b)
+
+    def many(blobs):
+        blobs = list(blobs)
+        counter["calls"] += len(blobs)
+        return hashing.sha256_many(blobs)
+
+    hashing.set_default_hash(one, many)
+    return counter
+
+
+def _attest_churn(rng, n_heads: int = 1000, k_updates: int = 10,
+                  rounds: int = 20) -> dict:
+    """Delta vs full-rebuild attestation under head churn: per round,
+    k single-head updates then one attest.  The full path re-hashes all
+    n leaves + ~n internal nodes every time; the delta path re-hashes
+    only the k touched O(log n) leaf paths."""
+    from repro.core import FBlob, ForkBase
+    from repro.proof.attest import attest_heads
+    from repro.storage import MemoryBackend
+
+    counter = _counting_hash()
+    try:
+        db = ForkBase(MemoryBackend())
+        keys = [b"key%06d" % i for i in range(n_heads)]
+        for i, key in enumerate(keys):
+            db.put(key, FBlob(b"v%d" % i))
+        att = db.attest()                     # delta tree: one full build
+        delta_s = delta_calls = 0.0
+        full_s = full_calls = 0.0
+        version = 0
+        for r in range(rounds):
+            picks = [keys[int(p)] for p in
+                     rng.integers(0, n_heads, k_updates)]
+            for key in picks:                 # k single-head updates
+                version += 1
+                db.put(key, FBlob(b"u%d" % version))
+            c0 = counter["calls"]
+            t0 = time.perf_counter()
+            att = db.attest()
+            delta_s += time.perf_counter() - t0
+            delta_calls += counter["calls"] - c0
+            # full rebuild of the SAME table for comparison
+            c0 = counter["calls"]
+            t0 = time.perf_counter()
+            full = attest_heads(db.branches)
+            full_s += time.perf_counter() - t0
+            full_calls += counter["calls"] - c0
+            assert att.root == full.root      # bit-identical commitment
+        st = db._delta_attestor.stats
+        out = {
+            "heads": n_heads, "updates_per_round": k_updates,
+            "rounds": rounds,
+            "delta_attest_ms": delta_s / rounds * 1e3,
+            "full_attest_ms": full_s / rounds * 1e3,
+            "delta_hash_calls_per_attest": delta_calls / rounds,
+            "full_hash_calls_per_attest": full_calls / rounds,
+            "wallclock_speedup": full_s / max(delta_s, 1e-12),
+            "hash_call_ratio": full_calls / max(delta_calls, 1e-12),
+            "delta_full_rebuilds": st.full_rebuilds,
+            "delta_leaf_hashes_total": st.leaf_hashes,
+            "delta_node_hashes_total": st.node_hashes,
+        }
+    finally:
+        hashing.use_sha256()
+    emit("attest_churn_delta_ms", out["delta_attest_ms"],
+         f"x{out['wallclock_speedup']:.1f} vs full rebuild "
+         f"({out['delta_hash_calls_per_attest']:.0f} vs "
+         f"{out['full_hash_calls_per_attest']:.0f} hash calls)")
+    return out
+
+
 def _verify_accounting(rng) -> dict:
     store = MemoryBackend(verify=True)
     db = ForkBase(store, verify_get=True)
@@ -116,6 +199,7 @@ def run() -> None:
     out = {"n_proofs": N_PROOFS, "map_n": MAP_N}
     out["proof_sizes"] = _proof_sizes(rng)
     out.update(_throughput(rng))
+    out["attest_churn"] = _attest_churn(rng)
     out.update(_verify_accounting(rng))
     with open(BENCH_JSON, "w") as f:
         json.dump(out, f, indent=2)

@@ -133,6 +133,18 @@ class ForkBaseLedger:
         return self.db.verify_lineage(head, target)
 
     # ------------------------------------------------- light-client proofs
+    def attest(self, secret: bytes | None = None):
+        """Delta head attestation over the ledger engine (HMAC-signed
+        with ``secret``): committing a block re-hashes only the touched
+        heads' O(log n) paths, so attest-per-block is cheap.  A light
+        client refreshes its trust anchor from (attestation,
+        ``prove_chain_head()``) instead of an out-of-band head uid."""
+        return self.db.attest(context=b"ledger", secret=secret)
+
+    def prove_chain_head(self):
+        """Audit path binding the chain head to ``attest()``'s root."""
+        return self.db.prove_head("chain")
+
     def block_uid(self, height: int) -> bytes:
         return self.db.track("chain", "master")[self.height - 1 - height].uid
 
@@ -222,6 +234,28 @@ class LightClient:
 
     def __init__(self, head_uid: bytes):
         self.head_uid = bytes(head_uid)
+        self.attested_epoch: int | None = None   # GC epoch of the anchor
+
+    def refresh_head(self, attestation, head_proof,
+                     secret: bytes | None = None) -> bytes:
+        """Adopt a new trust anchor from a (signed) delta attestation +
+        head proof: the attested chain head becomes ``head_uid`` only if
+        the proof closes against the attestation root (and the HMAC
+        checks out when ``secret`` is given).  Records the attestation's
+        GC epoch: the epoch-fence handshake guarantees proofs against
+        this anchor stay servable until the second collection after the
+        attested epoch begins, so a client comparing epochs knows when
+        it must refresh."""
+        from ..proof import InvalidProof, verify_head
+        from ..proof.delta import attestation_epoch
+        from ..proof.attest import verify_attestation
+        key, tag, uid = verify_head(attestation, head_proof, secret=secret)
+        if key != b"chain" or tag != "master":
+            raise InvalidProof("attested head is not the chain head")
+        self.head_uid = bytes(uid)
+        self.attested_epoch = attestation_epoch(
+            verify_attestation(attestation))
+        return self.head_uid
 
     def verify_block(self, lineage_proof, block_uid: bytes) -> int:
         """Authenticates ``block_uid`` as an ancestor of the trusted

@@ -46,6 +46,38 @@ class BranchTable:
 
     def __init__(self):
         self._keys: dict[bytes, KeyBranches] = {}
+        self._listeners: list = []
+        # incremental head refcounts: uid -> number of (key, tag) slots
+        # plus UB memberships pointing at it.  all_heads() — hammered by
+        # every attest() and every GC root snapshot — reads this instead
+        # of walking the whole table.
+        self._head_rc: dict[bytes, int] = {}
+
+    # ---- mutation hooks (delta attestations) ----
+    def add_listener(self, fn) -> None:
+        """Register ``fn(key)`` to fire after any head-state mutation of
+        that key — the dirty-key feed for incremental attestations."""
+        self._listeners.append(fn)
+
+    def remove_listener(self, fn) -> None:
+        try:
+            self._listeners.remove(fn)
+        except ValueError:
+            pass
+
+    def _touch(self, key: bytes) -> None:
+        for fn in self._listeners:
+            fn(key)
+
+    def _inc(self, uid: bytes) -> None:
+        self._head_rc[uid] = self._head_rc.get(uid, 0) + 1
+
+    def _dec(self, uid: bytes) -> None:
+        n = self._head_rc.get(uid, 0) - 1
+        if n > 0:
+            self._head_rc[uid] = n
+        else:
+            self._head_rc.pop(uid, None)
 
     def of(self, key: bytes) -> KeyBranches:
         return self._keys.setdefault(bytes(key), KeyBranches())
@@ -68,18 +100,28 @@ class BranchTable:
         any tag that may later alias them — remove() consults this."""
         kb = self.of(key)
         for b in bases:
-            kb.ub.discard(b)
+            if b in kb.ub:
+                kb.ub.discard(b)
+                self._dec(b)
             kb.foc.discard(b)       # derived from -> no longer a leaf
-        kb.ub.add(uid)
+        if uid not in kb.ub:
+            kb.ub.add(uid)
+            self._inc(uid)
         if foc:
             kb.foc.add(uid)
+        self._touch(bytes(key))
 
     def set_head(self, key: bytes, branch: str, uid: bytes,
                  guard: bytes | None = None) -> None:
         kb = self.of(key)
         if guard is not None and kb.tb.get(branch) != guard:
             raise GuardFailed(branch)
+        old = kb.tb.get(branch)
+        if old is not None:
+            self._dec(old)
         kb.tb[branch] = uid
+        self._inc(uid)
+        self._touch(bytes(key))
 
     def head(self, key: bytes, branch: str) -> bytes | None:
         return self.of(key).tb.get(branch)
@@ -89,6 +131,8 @@ class BranchTable:
         if new_branch in kb.tb:
             raise BranchExists(new_branch)
         kb.tb[new_branch] = uid
+        self._inc(uid)
+        self._touch(bytes(key))
 
     def rename(self, key: bytes, old: str, new: str) -> None:
         kb = self.of(key)
@@ -97,6 +141,7 @@ class BranchTable:
         if old not in kb.tb:
             raise NoSuchRef(old)
         kb.tb[new] = kb.tb.pop(old)
+        self._touch(bytes(key))
 
     def remove(self, key: bytes, branch: str) -> None:
         """Drop the tagged branch; its head also leaves the UB table, so
@@ -107,9 +152,13 @@ class BranchTable:
         alias restores the pre-tag state regardless of removal order."""
         kb = self.of(key)
         uid = kb.tb.pop(branch, None)
-        if (uid is not None and uid not in kb.foc
-                and uid not in kb.tb.values()):
-            kb.ub.discard(uid)
+        if uid is not None:
+            self._dec(uid)
+            if (uid not in kb.foc and uid not in kb.tb.values()
+                    and uid in kb.ub):
+                kb.ub.discard(uid)
+                self._dec(uid)
+            self._touch(bytes(key))
 
     def tagged(self, key: bytes) -> dict[str, bytes]:
         return dict(self.of(key).tb)
@@ -118,9 +167,7 @@ class BranchTable:
         return sorted(self.of(key).ub)
 
     def all_heads(self) -> set[bytes]:
-        """Every live head across all keys — the GC root set (TB + UB)."""
-        out: set[bytes] = set()
-        for kb in self._keys.values():
-            out.update(kb.tb.values())
-            out.update(kb.ub)
-        return out
+        """Every live head across all keys — the GC root set (TB + UB).
+        Served from the incremental refcounts: O(distinct heads), not
+        O(keys x branches)."""
+        return set(self._head_rc)

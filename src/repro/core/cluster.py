@@ -166,6 +166,12 @@ class Cluster:
         self.mode = mode
         self.params = params
         self.index: dict[bytes, int] = {}   # master's chunk location map
+        # one attestation/GC epoch fence for the whole cluster:
+        # collections are cluster-wide, so servlet attestations pin into
+        # (and collections consume from) the dispatcher's fence
+        from ..gc.incremental import EpochFence
+        self.gc_fence = EpochFence()
+        self._audit_daemon = None
         self.nodes = [Node(ChunkStore(verify=verify), NodeStats())
                       for _ in range(n_nodes)]
         for i, node in enumerate(self.nodes):
@@ -241,6 +247,10 @@ class Cluster:
                 pins=pins, extra_roots=extra_roots,
                 extra_hooks=extra_hooks).collect(budget)
         roots, hooks = self._gc_roots_hooks(pins, extra_roots, extra_hooks)
+        # epoch fence: heads committed by attestations still in their
+        # grace window survive STW collections too
+        self.gc_fence.begin_epoch()
+        roots |= self.gc_fence.grace_roots()
         gc = GarbageCollector(self.nodes[0].servlet.store,
                               extra_roots=roots, ref_hooks=hooks)
         live, rounds, missing = gc.mark()
@@ -276,7 +286,8 @@ class Cluster:
             inventory_fn=lambda: list(self.index),
             sweep_fn=self._sweep_slice,
             flush_fn=self._flush_nodes,
-            on_done=lambda report: self._rebase_build_work())
+            on_done=lambda report: self._rebase_build_work(),
+            fence=self.gc_fence)
         col.begin()
         for node in self.nodes:      # fork-from-uid / pin root barriers
             node.servlet._track_collector(col)
@@ -317,12 +328,13 @@ class Cluster:
         Returns (cluster Attestation, per-servlet attestations)."""
         from ..proof.attest import (Attestation, leaf_hash, merkle_root,
                                     sign)
+        from ..proof.delta import pack_epoch
         atts = [nd.servlet.attest(
                     context=bytes(context) + b"|node%d" % i, secret=secret)
                 for i, nd in enumerate(self.nodes)]
         cluster_att = Attestation(
             merkle_root([leaf_hash(a.root) for a in atts]),
-            len(atts), bytes(context))
+            len(atts), pack_epoch(self.gc_fence.epoch, bytes(context)))
         return ((sign(cluster_att, secret) if secret is not None
                  else cluster_att), atts)
 
@@ -334,6 +346,25 @@ class Cluster:
         from ..proof.audit import Auditor
         return Auditor(sample=sample, seed=seed).audit_cluster(
             self, secret=secret)
+
+    def audit_daemon(self, *, sample: int = 32, seed: int = 0,
+                     secret: bytes | None = None, base_interval: int = 1,
+                     max_interval: int = 64):
+        """The persistent continuous-audit daemon for this cluster
+        (proof.AuditDaemon): call ``tick(budget)`` from the serving
+        loop.  One daemon per cluster — repeated calls return it (pass
+        different knobs by constructing proof.AuditDaemon directly)."""
+        from ..proof.audit import AuditDaemon
+        if self._audit_daemon is None:
+            self._audit_daemon = AuditDaemon(
+                self, sample=sample, seed=seed, secret=secret,
+                base_interval=base_interval, max_interval=max_interval)
+        return self._audit_daemon
+
+    def audit_tick(self, budget: int = 1):
+        """One continuous-audit tick (see ``audit_daemon``): audits at
+        most ``budget`` due targets and returns the tick's AuditReport."""
+        return self.audit_daemon().tick(budget)
 
     # ---- §4.6.1 construction rebalancing ----
     def _build_servlet_for(self, key, value) -> ForkBase:

@@ -99,8 +99,18 @@ class ForkBase:
         # explicit GC roots: in-flight readers / retention holds pin the
         # uids they need across a concurrent collect(); pinning mid-
         # collection fires the incremental root barrier
+        from ..gc.incremental import EpochFence
         from ..gc.pins import PinSet
         self.pins = PinSet(on_pin=self._gc_root_barrier)
+        # attestation/GC epoch handshake: attest() pins the heads it
+        # commits to; collections root pins still in the grace window
+        self.gc_fence = EpochFence()
+        # incremental attestation state (proof.delta), built lazily on
+        # the first attest()/prove_head()
+        self._delta_attestor = None
+        # per-root audit-path cache for prove_member/prove_absence
+        from ..proof.membership import ProofCache
+        self.proof_cache = ProofCache()
         # application-level link extractors (gc.mark ref_hooks): layers
         # that embed cids inside opaque values (ckpt manifests) register
         # here so gc() can trace through them
@@ -233,8 +243,13 @@ class ForkBase:
         if incremental:
             return self.incremental_gc(extra_roots=extra_roots).collect(
                 budget)
+        # STW collections honor the attestation epoch fence too: heads
+        # committed by a recent attestation stay provable for one more
+        # epoch regardless of how the collection is driven
+        self.gc_fence.begin_epoch()
+        roots = set(extra_roots) | self.gc_fence.grace_roots()
         return GarbageCollector(self.store, branches=self.branches,
-                                pins=self.pins, extra_roots=extra_roots,
+                                pins=self.pins, extra_roots=roots,
                                 ref_hooks=self.gc_hooks).collect()
 
     def incremental_gc(self, *, extra_roots: Iterable[bytes] = ()):
@@ -258,7 +273,8 @@ class ForkBase:
             return col
         col = IncrementalCollector(self.store, branches=self.branches,
                                    pins=self.pins, extra_roots=extra_roots,
-                                   ref_hooks=self.gc_hooks)
+                                   ref_hooks=self.gc_hooks,
+                                   fence=self.gc_fence)
         col.begin()
         self._track_collector(col)
         return col
@@ -472,40 +488,102 @@ class ForkBase:
         """Membership proof for one element of a chunkable value —
         by position (any kind) or by key (Set/Map).  Anchored on the
         value's tree root cid = the ``data`` field of its (provable)
-        meta chunk; verify with ``proof.verify_member(root, proof)``."""
+        meta chunk; verify with ``proof.verify_member(root, proof)``.
+        Hot paths are served from the per-root proof cache: roots are
+        content-addressed, so a cached audit path can never go stale —
+        a mutated value has a new root and misses."""
         from ..proof.membership import prove_member
         h = self.get(key, branch, uid=uid)
         if h is None:
             raise NoSuchRef(branch)
-        return prove_member(self._tree_of(h.obj), pos=pos, key=item_key)
+        req = ("pos", pos) if pos is not None else ("key", item_key)
+        return self._cached_proof(
+            h.obj, req,
+            lambda: prove_member(self._tree_of(h.obj), pos=pos,
+                                 key=item_key))
 
     def prove_absence(self, key: bytes, branch: str | None = None, *,
                       uid: bytes | None = None,
                       item_key: bytes = b""):
-        """Negative membership proof (sorted kinds)."""
+        """Negative membership proof (sorted kinds), cached per root
+        like ``prove_member``."""
         from ..proof.membership import prove_absence
         h = self.get(key, branch, uid=uid)
         if h is None:
             raise NoSuchRef(branch)
-        return prove_absence(self._tree_of(h.obj), item_key)
+        return self._cached_proof(
+            h.obj, ("absent", item_key),
+            lambda: prove_absence(self._tree_of(h.obj), item_key))
+
+    def _cached_proof(self, obj, req, build):
+        """Per-root proof-cache plumbing shared by prove_member and
+        prove_absence (the root is the value's content-addressed tree
+        root, so cached paths can never go stale)."""
+        root = bytes(obj.data)
+        cached = self.proof_cache.lookup(root, req)
+        if cached is not None:
+            return cached
+        proof = build()
+        self.proof_cache.store(root, req, proof)
+        return proof
+
+    def _delta(self):
+        from ..proof.delta import DeltaAttestor
+        if self._delta_attestor is None:
+            self._delta_attestor = DeltaAttestor(self.branches)
+        return self._delta_attestor
 
     def attest(self, context: bytes = b"",
                secret: bytes | None = None):
         """Head attestation: a Merkle commitment (optionally HMAC-signed)
         to every branch head this engine serves — the light client's
-        trust anchor.  Pair with ``prove_head`` / ``proof.verify_head``."""
-        from ..proof.attest import attest_heads
-        return attest_heads(self.branches, context=context, secret=secret)
+        trust anchor.  Pair with ``prove_head`` / ``proof.verify_head``.
+
+        Incremental: a persistent Merkle tree over the head entries is
+        maintained through branch-table mutation hooks, so an attest
+        after k head updates re-hashes O(k log heads) leaves instead of
+        rebuilding all of them (proof.delta; first use falls back to one
+        full build).  The attestation context carries the GC collector
+        epoch, and the committed heads are pinned with the epoch fence:
+        proofs against this attestation stay servable until the second
+        collection after now begins (gc.EpochFence handshake)."""
+        from ..proof.delta import pack_epoch
+        cluster = getattr(self.store, "cluster", None)
+        fence = cluster.gc_fence if cluster is not None else self.gc_fence
+        heads = self.branches.all_heads()
+        epoch = fence.pin(heads)
+        self._gc_attest_fence(heads)
+        return self._delta().attest(context=pack_epoch(epoch, context),
+                                    secret=secret)
+
+    def _gc_attest_fence(self, uids) -> None:
+        """Forward freshly attested heads to every in-flight incremental
+        collection: a sweep slice must not delete chunks beneath a head
+        committed by an attestation issued this epoch."""
+        if not self.gc_collectors:
+            return
+        self.gc_collectors = [c for c in self.gc_collectors if c.active]
+        for c in self.gc_collectors:
+            c.attest_fence(uids)
 
     def prove_head(self, key: bytes, branch: str | None = None, *,
                    uid: bytes | None = None):
         """Audit path showing one head is committed by ``attest()``.
         ``branch`` defaults to master (like get); pass ``uid`` for an
-        untagged fork-on-conflict head."""
-        from ..proof.attest import prove_head
+        untagged fork-on-conflict head.  Served off the resident delta
+        attestation tree: O(log heads) per proof, no re-hashing."""
+        from ..proof.attest import UB_TAG, encode_entry
+        key = _k(key)
         if branch is None and uid is None:
             branch = DEFAULT_BRANCH
-        return prove_head(self.branches, _k(key), branch, uid=uid)
+        if branch is None:
+            entry = encode_entry(key, UB_TAG, uid)
+        else:
+            head = self.branches.head(key, branch)
+            if head is None:
+                raise KeyError(branch)
+            entry = encode_entry(key, branch, head)
+        return self._delta().prove(entry)
 
     def audit(self, sample: int = 64, seed: int = 0,
               secret: bytes | None = None):

@@ -56,6 +56,13 @@ def use_sha256() -> None:
     set_default_hash(sha256, sha256_many)
 
 
+def current_hash() -> HashFn:
+    """Identity of the active cid hash — callers that memoize digests
+    (delta attestations, verify memos) compare this across calls and
+    rebuild wholesale when the algorithm was swapped."""
+    return _DEFAULT
+
+
 def content_hash(data: bytes) -> bytes:
     """chunk.cid = H(chunk.bytes)  (paper §4.2.1)."""
     return _DEFAULT(data)

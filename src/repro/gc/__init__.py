@@ -7,6 +7,9 @@
   GCPhase               the incremental state machine's phase enum
   GCReport              what one collection did (roots/live/swept/bytes)
   PinSet                explicit roots: in-flight readers, retention holds
+  EpochFence            attestation/collection epoch handshake: heads
+                        committed by a recent attest() stay provable
+                        through the next collection
 
 Entry points: ``ForkBase.gc()`` / ``ForkBase.incremental_gc()``
 (embedded engine), ``Cluster.gc()`` / ``Cluster.incremental_gc()``
@@ -16,9 +19,9 @@ Entry points: ``ForkBase.gc()`` / ``ForkBase.incremental_gc()``
 """
 from .collector import (GarbageCollector, GCReport, chunk_refs,
                         expand_refs, filter_roots, mark)
-from .incremental import GCPhase, IncrementalCollector
+from .incremental import EpochFence, GCPhase, IncrementalCollector
 from .pins import PinSet
 
-__all__ = ["GarbageCollector", "GCPhase", "GCReport",
+__all__ = ["EpochFence", "GarbageCollector", "GCPhase", "GCReport",
            "IncrementalCollector", "PinSet", "chunk_refs", "expand_refs",
            "filter_roots", "mark"]

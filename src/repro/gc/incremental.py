@@ -13,12 +13,14 @@ Phases of one collection epoch:
           pops at most ``budget`` gray cids, reads them with ONE
           ``get_many`` and grays their unseen references (shared inner
           loop ``collector.expand_refs``).  Black = shaded and
-          processed; white = never shaded.
-  SWEEP   when the gray queue drains, the condemned set is frozen as
-          inventory minus shaded; ``step(budget)`` deletes at most
-          ``budget`` condemned cids per call (``delete_many`` slices —
-          per owning node in the cluster).  The final slice flushes so
-          log tombstones are durable.
+          processed; white = never shaded.  When the gray queue drains,
+          the condemned set is frozen in budget-bounded inventory
+          slices (still MARK; see ``_freeze_slice``).
+  SWEEP   the condemned set is frozen as inventory minus shaded;
+          ``step(budget)`` deletes at most ``budget`` condemned cids
+          per call (``delete_many`` slices — per owning node in the
+          cluster).  The final slice flushes so log tombstones are
+          durable.
 
 Write barrier (the safety argument):
 
@@ -27,6 +29,8 @@ Write barrier (the safety argument):
     re-marks any *existing* white chunk the new value adopted by dedup
     or by structural reference; anything reachable from a post-snapshot
     head is reachable from shaded chunks or from snapshot roots.
+    While the sliced inventory freeze is in progress, shading also
+    pulls the cid back out of the partially built condemned set.
   * SWEEP: marking is over, so a put batch is *rescued* instead — its
     cids leave the condemned set before their slice is deleted.  A cid
     already swept is simply re-stored by the put (content addressing
@@ -40,6 +44,20 @@ Write barrier (the safety argument):
 Chunks condemned by the snapshot but re-abandoned mid-collection are
 floating garbage: they survive this epoch and fall in the next — the
 standard snapshot-at-the-beginning trade, never unsafe.
+
+Epoch handshake with ``attest()`` (ROADMAP "incremental attestations
+under concurrent GC"): an attestation commits to the branch heads of
+the instant it was issued, but the table keeps moving — a head can be
+retired right after signing and swept by the *next* collection, at
+which point ``prove_member`` against the freshly signed attestation
+dangles.  ``EpochFence`` closes the race: every attestation pins its
+committed heads at the current collection epoch, collections root all
+pins still inside a one-epoch grace window, and an attestation issued
+while a collection is in flight additionally rescues its heads out of
+the live condemned set (``attest_fence``).  The contract: proofs
+against an attestation stay servable until the SECOND collection after
+its issue begins — verifiers refresh at least once per GC epoch (the
+attested epoch is stamped into the context, see proof.delta).
 """
 from __future__ import annotations
 
@@ -48,6 +66,42 @@ from enum import Enum
 
 from .collector import GCReport, chunk_refs, expand_refs, filter_roots
 from .pins import PinSet
+
+
+class EpochFence:
+    """Persistent attestation/collection epoch registry for one engine
+    (or one cluster — collections there are cluster-wide).  Survives
+    across collector instances so epoch numbers are monotone and pins
+    outlive the collection they were issued under."""
+
+    def __init__(self, grace: int = 1):
+        self.epoch = 0                 # collection epochs begun so far
+        self.grace = grace             # epochs a pin outlives its issue
+        self._pins: dict[int, set[bytes]] = {}
+
+    def pin(self, uids) -> int:
+        """Record the heads an attestation just committed to; returns
+        the epoch number stamped into the attestation."""
+        e = self.epoch
+        if uids:
+            self._pins.setdefault(e, set()).update(bytes(u) for u in uids)
+        return e
+
+    def begin_epoch(self) -> int:
+        """A collection is starting: advance the epoch and expire pins
+        that fell out of the grace window."""
+        self.epoch += 1
+        for e in [e for e in self._pins if e < self.epoch - self.grace]:
+            del self._pins[e]
+        return self.epoch
+
+    def grace_roots(self) -> set[bytes]:
+        """Heads the starting collection must treat as roots: every pin
+        still inside the grace window."""
+        out: set[bytes] = set()
+        for uids in self._pins.values():
+            out |= uids
+        return out
 
 
 class GCPhase(Enum):
@@ -76,7 +130,7 @@ class IncrementalCollector:
     def __init__(self, store, branches=None, pins: PinSet | None = None,
                  extra_roots=(), ref_hooks=(), *, barrier_stores=None,
                  inventory_fn=None, sweep_fn=None, flush_fn=None,
-                 on_done=None):
+                 on_done=None, fence: EpochFence | None = None):
         self.store = store
         self.branches = branches
         self.pins = pins
@@ -91,11 +145,13 @@ class IncrementalCollector:
         self._flush_fn = (flush_fn if flush_fn is not None
                           else self.store.flush)
         self._on_done = on_done
+        self.fence = fence
         self.phase = GCPhase.IDLE
         self.epoch = 0
         self.report: GCReport | None = None
         self._shaded: set[bytes] = set()        # gray or black (tri-color)
         self._gray: deque[bytes] = deque()
+        self._inv_iter = None                   # sliced inventory freeze
         self._condemned: deque[bytes] = deque()
         self._condemned_set: set[bytes] = set()
 
@@ -126,12 +182,19 @@ class IncrementalCollector:
             roots |= self.branches.all_heads()      # branch-table copy
         if self.pins is not None:
             roots |= self.pins.uids()
+        if self.fence is not None:
+            # epoch handshake: heads committed by attestations still in
+            # their grace window survive this collection
+            self.epoch = self.fence.begin_epoch()
+            roots |= self.fence.grace_roots()
+        else:
+            self.epoch += 1
         frontier, missing = filter_roots(self.store, roots)
-        self.epoch += 1
         self.report = GCReport(roots=len(roots), missing_roots=missing,
                                epoch=self.epoch)
         self._shaded = set(frontier)
         self._gray = deque(frontier)
+        self._inv_iter = None
         self._condemned = deque()
         self._condemned_set = set()
         for s in self._barrier_stores:
@@ -150,6 +213,11 @@ class IncrementalCollector:
                     self._shaded.add(c)
                     self._gray.append(c)
                     self.report.barriered += 1
+                # the sliced inventory freeze may already have condemned
+                # this cid (it was white when its slice was snapshotted):
+                # shading it must also pull it back out
+                if self._condemned_set:
+                    self._condemned_set.discard(c)
         elif self.phase is GCPhase.SWEEP:
             for c in cids:
                 if c in self._condemned_set:
@@ -174,10 +242,14 @@ class IncrementalCollector:
         while frontier:
             for c in frontier:
                 self._condemned_set.discard(c)
-            self.report.barriered += len(frontier)
             present = [c for c, p in zip(frontier,
                                          self.store.has_many(frontier))
                        if p]
+            # only cids actually in the store were going to be deleted —
+            # a frontier cid the store no longer holds (lost replica,
+            # stale cluster index entry) was never rescued from anything
+            # and must not inflate the barrier count
+            self.report.barriered += len(present)
             nxt: list[bytes] = []
             for raw in self.store.get_many(present):
                 refs = list(chunk_refs(raw))
@@ -187,12 +259,21 @@ class IncrementalCollector:
                            if r in self._condemned_set)
             frontier = sorted(set(nxt))
 
+    def attest_fence(self, uids) -> None:
+        """Epoch handshake with ``attest()``: the heads an attestation
+        just committed to must survive this collection — shade (MARK)
+        or transitively rescue (SWEEP) each one, exactly like a
+        re-rooting event.  Between collections this is a no-op; the
+        cross-epoch half of the handshake is the EpochFence pin set
+        consumed by the next ``begin()``."""
+        for u in uids:
+            self.root_barrier(u)
+
     # ------------------------------------------------------------- step
     def step(self, budget: int = 256) -> GCPhase:
         """Advance the collection by at most ``budget`` chunks (marked
-        OR swept — one bounded pause) and return the phase.  The
-        MARK->SWEEP transition step freezes the condemned set without
-        deleting anything, so a slice never exceeds its budget."""
+        OR swept OR inventory-frozen — one bounded pause) and return
+        the phase."""
         if budget < 1:
             raise ValueError(f"budget must be >= 1, got {budget}")
         if not self.active:
@@ -203,11 +284,17 @@ class IncrementalCollector:
                 self.report.mark_rounds += 1
                 batch = [self._gray.popleft()
                          for _ in range(min(budget, len(self._gray)))]
-                self._gray.extend(
-                    expand_refs(self.store, batch, self.ref_hooks,
-                                self._shaded))
-            if not self._gray:
-                self._freeze_condemned()
+                fresh = expand_refs(self.store, batch, self.ref_hooks,
+                                    self._shaded)
+                self._gray.extend(fresh)
+                if self._condemned_set:
+                    # marking resumed mid-freeze (a barrier re-grayed a
+                    # put): refs shaded now may sit in the partially
+                    # frozen condemned set — pull them back out
+                    for c in fresh:
+                        self._condemned_set.discard(c)
+                return self.phase
+            self._freeze_slice(budget)
             return self.phase
         # SWEEP: delete up to ``budget`` still-condemned cids
         batch: list[bytes] = []
@@ -233,17 +320,40 @@ class IncrementalCollector:
         return self.report
 
     # ---------------------------------------------------------- internal
-    def _freeze_condemned(self) -> None:
-        """Gray queue drained: freeze inventory-minus-shaded as the
-        condemned set and enter SWEEP.  Chunks put after this instant
-        are absent from the frozen inventory and can never be swept."""
+    def _freeze_slice(self, budget: int) -> None:
+        """Sliced inventory freeze (ROADMAP): the MARK->SWEEP transition
+        used to filter the whole ``iter_cids()`` inventory against the
+        shaded set in one O(store) pause; now each step() consumes at
+        most ``budget`` inventory cids, building the condemned set
+        across as many bounded slices as the store is large.
+
+        Safety while the freeze is in progress: the phase stays MARK, so
+        the write barrier keeps shading new puts gray (and pulls any
+        already-condemned cid back out of the condemned set), and a
+        non-empty gray queue is drained by mark slices before the next
+        freeze slice — a cid enters SWEEP condemned only if it was
+        still white after every barrier event that touched it."""
+        if self._inv_iter is None:
+            # backends snapshot iter_cids() as a cid list (a pointer
+            # copy, no chunk payloads); the O(n) membership filtering
+            # below is what gets sliced.  A generation list would shed
+            # the copy too — noted in the ROADMAP as the production shape.
+            self._inv_iter = iter(self._inventory_fn())
+        taken = 0
+        for cid in self._inv_iter:
+            if cid not in self._shaded and cid not in self._condemned_set:
+                self._condemned.append(cid)
+                self._condemned_set.add(cid)
+            taken += 1
+            if taken >= budget:
+                return
+        # iterator exhausted: the condemned set is frozen — enter SWEEP.
+        # The deque keeps inventory order (each sweep slice sorts its
+        # own batch); a global sort here would be an O(dead) pause.
+        self._inv_iter = None
         self.report.live_chunks = len(self._shaded)
-        cond = sorted(c for c in self._inventory_fn()
-                      if c not in self._shaded)
-        self._condemned = deque(cond)
-        self._condemned_set = set(cond)
         self.phase = GCPhase.SWEEP
-        if not self._condemned:
+        if not self._condemned_set:
             self._finish()
 
     def _sweep_slice(self, cids) -> tuple[int, int]:
@@ -257,6 +367,7 @@ class IncrementalCollector:
         if self.report.swept_chunks:
             self._flush_fn()         # durable tombstones, like collect()
         self._gray.clear()
+        self._inv_iter = None
         self._condemned.clear()
         self._condemned_set = set()
         self._shaded = set()         # O(live) memory is the epoch's, not ours

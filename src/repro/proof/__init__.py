@@ -20,12 +20,14 @@ close the chain.  Batch verification routes all hashing through
 from .attest import (Attestation, HeadProof, attest_heads, head_entries,
                      merkle_root, prove_head, verify_attestation,
                      verify_head)
-from .audit import AuditFinding, Auditor, AuditReport
+from .audit import AuditDaemon, AuditFinding, Auditor, AuditReport
+from .delta import (DeltaAttestor, DeltaStats, attestation_epoch,
+                    pack_epoch, unpack_epoch)
 from .lineage import (LineageProof, lineage_path, prove_lineage,
                       verify_lineage)
 from .membership import (Claim, InvalidProof, MembershipProof,
-                         prove_absence, prove_member, verify_member,
-                         verify_member_many)
+                         ProofCache, VerifyMemo, prove_absence,
+                         prove_member, verify_member, verify_member_many)
 from ..core.fobject import FObject
 from ..core.hashing import content_hash_many
 
@@ -51,9 +53,11 @@ def verify_version(uid: bytes, meta_raw: bytes) -> FObject:
 __all__ = [
     "Attestation", "HeadProof", "attest_heads", "head_entries",
     "merkle_root", "prove_head", "verify_attestation", "verify_head",
-    "AuditFinding", "Auditor", "AuditReport",
+    "AuditDaemon", "AuditFinding", "Auditor", "AuditReport",
+    "DeltaAttestor", "DeltaStats", "attestation_epoch", "pack_epoch",
+    "unpack_epoch",
     "LineageProof", "lineage_path", "prove_lineage", "verify_lineage",
-    "Claim", "InvalidProof", "MembershipProof", "prove_absence",
-    "prove_member", "verify_member", "verify_member_many",
-    "verify_version",
+    "Claim", "InvalidProof", "MembershipProof", "ProofCache",
+    "VerifyMemo", "prove_absence", "prove_member", "verify_member",
+    "verify_member_many", "verify_version",
 ]

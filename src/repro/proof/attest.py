@@ -41,15 +41,29 @@ def encode_entry(key: bytes, tag: str, uid: bytes) -> bytes:
 
 
 def decode_entry(e: bytes) -> tuple[bytes, str, bytes]:
-    (kl,) = _U32.unpack_from(e, 0)
-    key = e[4:4 + kl]
-    i = 4 + kl
-    (tl,) = _U32.unpack_from(e, i)
-    tag = e[i + 4:i + 4 + tl]
-    uid = e[i + 4 + tl:]
-    if len(uid) != 32:
-        raise InvalidProof("bad entry uid")
-    return bytes(key), tag.decode(), bytes(uid)
+    """Parse one committed head entry.  Every framing length is
+    validated and every parse failure surfaces as InvalidProof — a
+    malformed entry inside an otherwise-valid attestation (e.g. a buggy
+    or hostile attester committing garbage) must not leak struct.error
+    or silently-truncated fields through ``verify_head``."""
+    try:
+        (kl,) = _U32.unpack_from(e, 0)
+        key = e[4:4 + kl]
+        if len(key) != kl:
+            raise InvalidProof("truncated entry key")
+        i = 4 + kl
+        (tl,) = _U32.unpack_from(e, i)
+        tag = e[i + 4:i + 4 + tl]
+        if len(tag) != tl:
+            raise InvalidProof("truncated entry tag")
+        uid = e[i + 4 + tl:]
+        if len(uid) != 32:
+            raise InvalidProof("bad entry uid")
+        return bytes(key), tag.decode(), bytes(uid)
+    except InvalidProof:
+        raise
+    except (struct.error, IndexError, UnicodeDecodeError) as exc:
+        raise InvalidProof(f"malformed head entry: {exc}") from exc
 
 
 def head_entries(branches) -> list[bytes]:

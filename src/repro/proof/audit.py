@@ -29,10 +29,10 @@ import numpy as np
 from ..core.fobject import CHUNKABLE_TYPES, FObject
 from ..core.hashing import content_hash_many
 from ..core.postree import POSTree
-from .attest import (encode_entry, entry_leaves, head_entries, prove_entry,
-                     verify_head)
+from .attest import verify_head
 from .lineage import LineageProof, verify_lineage
-from .membership import InvalidProof, prove_member, verify_member_many
+from .membership import (InvalidProof, VerifyMemo, prove_member,
+                         verify_member_many)
 
 
 @dataclass(frozen=True)
@@ -83,6 +83,11 @@ class Auditor:
     def __init__(self, sample: int = 64, seed: int = 0):
         self.sample = sample
         self._rng = np.random.default_rng(seed)
+        # decoded-node memo persists across audit rounds: an auditor
+        # re-checking the same trees round after round hashes/decodes
+        # only nodes it has never seen (content addressing keeps the
+        # memo coherent for free)
+        self.memo = VerifyMemo()
 
     def _sample(self, seq):
         seq = list(seq)
@@ -133,23 +138,19 @@ class Auditor:
         verifiers, anchored on a fresh attestation."""
         rep = AuditReport()
         att = db.attest(context=node.encode(), secret=secret)
-        # the attestation Merkle tree is computed ONCE; every sampled
-        # head's audit path is extracted from the same (entries, leaves)
-        entries = head_entries(db.branches)
-        leaves = entry_leaves(entries)
         heads: list[tuple[bytes, str, bytes]] = []
         for key in db.branches.keys():
             for tag, uid in db.branches.tagged(key).items():
                 heads.append((key, tag, uid))
         heads = self._sample(heads)
         rep.heads_checked = len(heads)
-        # 1) every sampled head is committed by the attestation
+        # 1) every sampled head is committed by the attestation; the
+        # audit paths come straight off the engine's resident delta
+        # attestation tree — no re-Merkle-ization per audit round
         committed: list[tuple[bytes, str, bytes]] = []
         for key, tag, uid in heads:
             try:
-                verify_head(att, prove_entry(entries, leaves,
-                                             encode_entry(key, tag, uid)),
-                            secret=secret)
+                verify_head(att, db.prove_head(key, tag), secret=secret)
                 rep.proofs_verified += 1
                 committed.append((key, tag, uid))
             except (InvalidProof, KeyError) as e:
@@ -226,8 +227,10 @@ class Auditor:
             except (InvalidProof, ValueError) as e:
                 rep.findings.append(AuditFinding(
                     node, "bad-proof", f"lineage {key!r}@{tag}: {e}", uid))
-        # batched membership verification: ONE hash dispatch for all
-        results = verify_member_many(member_batch, strict=False)
+        # batched membership verification: ONE hash dispatch for the
+        # nodes this round sees for the first time (memo persists)
+        results = verify_member_many(member_batch, strict=False,
+                                     memo=self.memo)
         for (root, _), res in zip(member_batch, results):
             if isinstance(res, InvalidProof):
                 rep.findings.append(AuditFinding(
@@ -237,12 +240,11 @@ class Auditor:
         return rep
 
     # ---------------------------------------------------------- cluster
-    def audit_cluster(self, cluster,
-                      secret: bytes | None = None) -> AuditReport:
-        """Dispatcher-side audit: master-index placement, per-servlet
-        engine audits, and key-routing divergence."""
+    def audit_placement(self, cluster) -> AuditReport:
+        """Sampled master-index placement checks: every sampled index
+        entry must be held by the owning node and hash back to its cid
+        (one batched hash over everything held)."""
         rep = AuditReport()
-        # 1) sampled placement checks against the owning node's store
         placed = self._sample(cluster.index.items())
         rep.chunks_checked += len(placed)
         held: list[tuple[int, bytes, bytes]] = []
@@ -269,6 +271,14 @@ class Auditor:
                 rep.findings.append(AuditFinding(
                     f"node{ni}", "corrupt",
                     "stored bytes do not hash to the indexed cid", cid))
+        return rep
+
+    def audit_cluster(self, cluster,
+                      secret: bytes | None = None) -> AuditReport:
+        """Dispatcher-side audit: master-index placement, per-servlet
+        engine audits, and key-routing divergence."""
+        # 1) sampled placement checks against the owning node's store
+        rep = self.audit_placement(cluster)
         # 2) key-routing divergence: branch state must live only on the
         # key's home servlet
         owner_of: dict[bytes, list[int]] = {}
@@ -288,3 +298,121 @@ class Auditor:
             rep.merge(self.audit_engine(nd.servlet, node=f"node{ni}",
                                         secret=secret))
         return rep
+
+
+# ------------------------------------------------------------------ daemon
+
+class AuditDaemon:
+    """Continuous audit loop for a cluster (ROADMAP "continuous audit
+    daemon"): instead of on-demand ``Cluster.audit`` calls, the serving
+    loop calls ``tick(budget)`` and the daemon spreads sampled audits
+    over time —
+
+      * per-node exponential backoff: a node that keeps auditing clean
+        is re-audited at a doubling interval (capped at
+        ``max_interval`` ticks), so steady-state audit load decays to a
+        heartbeat;
+      * a finding triggers an IMMEDIATE re-audit of the node (transient
+        read races don't quarantine) and, if anything is still wrong,
+        the node is quarantined: recorded in ``self.quarantined``,
+        reported via the tick's AuditReport, and kept under base-rate
+        audit so repair is observed;
+      * the master-index placement/routing checks run as their own
+        backoff target beside the per-node engine audits.
+
+    The daemon's Auditor carries the persistent decoded-node memo, so
+    successive ticks over unchanged trees skip re-hashing shared nodes.
+    Target scheduling is tick-counted (the caller decides what a tick
+    means — request batches, seconds, GC slices), keeping the daemon
+    deterministic and testable."""
+
+    PLACEMENT = "placement"
+    MAX_FINDINGS = 1024       # retained findings (a quarantined node
+                              # keeps auditing at base rate forever)
+
+    def __init__(self, cluster, *, sample: int = 32, seed: int = 0,
+                 secret: bytes | None = None, base_interval: int = 1,
+                 max_interval: int = 64):
+        self.cluster = cluster
+        self.auditor = Auditor(sample=sample, seed=seed)
+        self.secret = secret
+        self.base_interval = max(1, base_interval)
+        self.max_interval = max(self.base_interval, max_interval)
+        self.ticks = 0
+        self.audits = 0
+        self.quarantined: set[str] = set()
+        self.findings: list[AuditFinding] = []
+        targets = [f"node{i}" for i in range(len(cluster.nodes))]
+        targets.append(self.PLACEMENT)
+        # stagger first-due ticks so a fresh daemon does not audit the
+        # whole cluster in its first tick
+        self._interval = {t: self.base_interval for t in targets}
+        self._due = {t: 1 + i for i, t in enumerate(targets)}
+
+    # ---------------------------------------------------------- internals
+    def _audit_target(self, target: str) -> AuditReport:
+        self.audits += 1
+        if target == self.PLACEMENT:
+            return self.auditor.audit_placement(self.cluster)
+        ni = int(target[4:])
+        return self.auditor.audit_engine(self.cluster.nodes[ni].servlet,
+                                         node=target,
+                                         secret=self.secret)
+
+    def _quarantine_of(self, report: AuditReport) -> set[str]:
+        return {f.node for f in report.findings}
+
+    def _record(self, findings) -> None:
+        """Append to the findings log, keeping only the newest
+        MAX_FINDINGS — an unrepaired node would grow it forever."""
+        self.findings.extend(findings)
+        if len(self.findings) > self.MAX_FINDINGS:
+            del self.findings[:len(self.findings) - self.MAX_FINDINGS]
+
+    # -------------------------------------------------------------- tick
+    def tick(self, budget: int = 1) -> AuditReport:
+        """Advance the daemon one tick: audit up to ``budget`` due
+        targets (earliest-due first) and return the merged report of
+        everything audited this tick."""
+        if budget < 1:
+            raise ValueError(f"budget must be >= 1, got {budget}")
+        self.ticks += 1
+        rep = AuditReport()
+        due = sorted((t for t, d in self._due.items() if d <= self.ticks),
+                     key=lambda t: (self._due[t], t))
+        for target in due[:budget]:
+            r = self._audit_target(target)
+            rep.merge(r)
+            if r.ok:
+                self._interval[target] = min(self.max_interval,
+                                             self._interval[target] * 2)
+            else:
+                # immediate re-audit: only a repeatable finding
+                # quarantines (a transient read race does not), but
+                # either way the target drops back to the base rate
+                r2 = self._audit_target(target)
+                rep.merge(r2)
+                self._record(r.findings)
+                if not r2.ok:
+                    self._record(r2.findings)
+                    bad = self._quarantine_of(r2)
+                    self.quarantined |= bad
+                    # a quarantined node drops to base-rate auditing so
+                    # repair is observed — even when the finding came
+                    # from another target (e.g. the placement check)
+                    for node in bad:
+                        if node in self._interval:
+                            self._interval[node] = self.base_interval
+                            self._due[node] = min(self._due[node],
+                                                  self.ticks + 1)
+                self._interval[target] = self.base_interval
+            self._due[target] = self.ticks + self._interval[target]
+        return rep
+
+    def release(self, node: str) -> None:
+        """Operator verb: lift a quarantine after repair; the node
+        re-enters the rotation at the base audit rate."""
+        self.quarantined.discard(node)
+        if node in self._interval:
+            self._interval[node] = self.base_interval
+            self._due[node] = self.ticks + 1

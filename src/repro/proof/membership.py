@@ -24,10 +24,11 @@ from __future__ import annotations
 
 import bisect
 import struct
+from collections import OrderedDict
 from dataclasses import dataclass
 
 from ..core import chunk as ck
-from ..core.hashing import content_hash_many
+from ..core.hashing import content_hash_many, current_hash
 from ..core.postree import SORTED_KINDS, child_by_key, child_by_pos
 
 _U16 = struct.Struct("<H")
@@ -127,6 +128,93 @@ class MembershipProof:
     @property
     def height(self) -> int:
         return len(self.nodes) + 1
+
+
+# ---------------------------------------------------------------- caching
+
+class ProofCache:
+    """Per-root audit-path cache (ROADMAP "proof caching"): a proof for
+    (root cid, item) is immutable because the root is content-addressed
+    — mutating the tree yields a NEW root, so a stale entry is
+    unreachable by construction and invalidation is free.  Eviction is
+    whole-root LRU: hot trees keep their paths resident, cold roots age
+    out with every proof under them."""
+
+    def __init__(self, max_roots: int = 128,
+                 max_proofs_per_root: int = 4096):
+        self.max_roots = max_roots
+        self.max_proofs_per_root = max_proofs_per_root
+        self._roots: OrderedDict[bytes, dict] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def lookup(self, root: bytes, req) -> "MembershipProof | None":
+        entry = self._roots.get(root)
+        if entry is None:
+            self.misses += 1
+            return None
+        self._roots.move_to_end(root)
+        proof = entry.get(req)
+        if proof is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return proof
+
+    def store(self, root: bytes, req, proof: "MembershipProof") -> None:
+        entry = self._roots.get(root)
+        if entry is None:
+            entry = self._roots[root] = {}
+            while len(self._roots) > self.max_roots:
+                self._roots.popitem(last=False)
+        if len(entry) < self.max_proofs_per_root:
+            entry[req] = proof
+        self._roots.move_to_end(root)
+
+    def clear(self) -> None:
+        self._roots.clear()
+
+
+class VerifyMemo:
+    """Persistent decoded-node memo for ``verify_member_many`` across
+    rounds (ROADMAP: the batched verifier's per-call dedup "could
+    persist across audit rounds").  Content addressing makes the memo
+    coherent: the digest/decoding of a raw chunk never changes — except
+    when the active cid hash is swapped, which clears it wholesale.
+    Bounded: when the node table outgrows ``max_nodes`` after a round
+    it is reset (audit batches re-warm it in one dispatch)."""
+
+    def __init__(self, max_nodes: int = 8192):
+        self.max_nodes = max_nodes
+        self.digest: dict[bytes, bytes] = {}
+        self.index: dict[tuple[bytes, int], list] = {}
+        self.leaf: dict[tuple[bytes, int], object] = {}
+        self.hits = 0
+        self.misses = 0
+        self._hash_fn = current_hash()
+
+    def refresh(self) -> None:
+        cur = current_hash()
+        if cur is not self._hash_fn:
+            self.clear()
+            self._hash_fn = cur
+
+    def add_digests(self, raws: list[bytes]) -> None:
+        """Hash the raws not yet memoized — ONE batched dispatch."""
+        fresh = [r for r in raws if r not in self.digest]
+        self.hits += len(raws) - len(fresh)
+        self.misses += len(fresh)
+        if fresh:
+            self.digest.update(zip(fresh, content_hash_many(fresh)))
+
+    def trim(self) -> None:
+        if len(self.digest) > self.max_nodes:
+            self.clear()
+
+    def clear(self) -> None:
+        self.digest.clear()
+        self.index.clear()
+        self.leaf.clear()
 
 
 # ------------------------------------------------------------------ prove
@@ -303,14 +391,19 @@ def verify_member(root_cid: bytes, proof) -> Claim:
                        lambda r: _leaf_items(p.kind, r))
 
 
-def verify_member_many(items, *, strict: bool = True):
+def verify_member_many(items, *, strict: bool = True,
+                       memo: VerifyMemo | None = None):
     """Batched stateless verification of ``[(root_cid, proof), ...]``.
 
     All *distinct* node/leaf raws across every proof are hashed with one
     ``content_hash_many`` call (one Pallas ``fphash`` launch on the TPU
     path) and decoded/parsed once — shared upper index nodes cost O(1)
     across the whole batch.  ``strict`` raises on the first bad proof;
-    otherwise bad entries come back as the InvalidProof instance."""
+    otherwise bad entries come back as the InvalidProof instance.
+
+    ``memo`` (a VerifyMemo) persists the digest/decoded-node tables
+    across calls: an auditor verifying round after round against the
+    same trees only hashes nodes it has never seen."""
     proofs = [(bytes(rc), _as_proof(pr)) for rc, pr in items]
     distinct: dict[bytes, None] = {}
     for _, p in proofs:
@@ -318,9 +411,16 @@ def verify_member_many(items, *, strict: bool = True):
             distinct[raw] = None
         distinct[p.leaf] = None
     raws = list(distinct)
-    digest = dict(zip(raws, content_hash_many(raws)))
-    index_cache: dict[tuple[bytes, int], list] = {}
-    leaf_cache: dict[tuple[bytes, int], object] = {}
+    if memo is not None:
+        memo.refresh()
+        memo.add_digests(raws)
+        digest = memo.digest
+        index_cache = memo.index
+        leaf_cache = memo.leaf
+    else:
+        digest = dict(zip(raws, content_hash_many(raws)))
+        index_cache = {}
+        leaf_cache = {}
 
     def decode_index_cached(kind):
         def dec(raw):
@@ -348,4 +448,6 @@ def verify_member_many(items, *, strict: bool = True):
             if strict:
                 raise InvalidProof(f"proof {i}: {e}") from e
             out.append(e)
+    if memo is not None:
+        memo.trim()
     return out

@@ -118,8 +118,16 @@ class MemoryBackend(BackendBase):
 
     # ---------------------------------------------------------------- log
     def _replay(self, path: str) -> None:
+        """Rebuild ``_data`` AND the replay-recoverable StoreStats from
+        the record stream.  Every chunk record restores ``puts`` /
+        ``logical_bytes`` (the log only ever holds first-time puts, so
+        a record is exactly one counted put) and every tombstone counts
+        in ``deletes`` / ``reclaimed_bytes`` — without this, dedup and
+        space ratios are wrong after every reopen (puts/logical reset
+        to zero, deletes invisible)."""
         from ..core.chunk import cid_of
         from ..core.hashing import CID_LEN
+        st = self.stats
         good = 0                       # offset after the last whole record
         with open(path, "rb") as f:
             while True:
@@ -131,19 +139,23 @@ class MemoryBackend(BackendBase):
                 if ln == _TOMBSTONE:   # deleted later in the stream
                     old = self._data.pop(cid, None)
                     if old is not None:
-                        self.stats.physical_bytes -= len(old)
+                        st.physical_bytes -= len(old)
+                        st.deletes += 1
+                        st.reclaimed_bytes += len(old)
                     good = f.tell()
                     continue
                 raw = f.read(ln)
                 if len(raw) < ln:
                     break  # torn tail write: recover prefix
                 if self.verify:
-                    self.stats.verifies += 1
+                    st.verifies += 1
                     if cid_of(raw) != cid:
-                        self.stats.verify_failures += 1
+                        st.verify_failures += 1
                         raise TamperedChunk(cid, "log replay")
+                st.puts += 1
+                st.logical_bytes += ln
                 if cid not in self._data:
-                    self.stats.physical_bytes += ln
+                    st.physical_bytes += ln
                 self._data[cid] = raw
                 good = f.tell()
         if good < os.path.getsize(path):

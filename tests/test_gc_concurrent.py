@@ -443,6 +443,91 @@ def test_external_engine_root_barrier_reaches_cluster_collection(rng):
     assert db.get("k", "back").blob().read() == data
 
 
+def test_root_barrier_counts_only_present_rescues(rng):
+    """Regression: the transitive mid-sweep rescue used to count every
+    frontier cid in report.barriered, including cids the store no
+    longer holds — which were never going to be deleted and were never
+    'rescued' from anything."""
+    db = ForkBase(MemoryBackend(), PARAMS)
+    uid = db.put("k", FBlob(rng.bytes(20_000)), "tmp")
+    db.remove("k", "tmp")                       # fully detached
+    col = db.incremental_gc()
+    while col.step(8) is GCPhase.MARK:
+        pass
+    assert col.phase is GCPhase.SWEEP
+    # one condemned chunk silently vanishes (lost replica / bit-rot
+    # delete) while STAYING in the condemned set
+    from repro.gc import chunk_refs
+    victim = next(c for c in sorted(col._condemned_set)
+                  if c != uid and not chunk_refs(db.store._data[c]))
+    del db.store._data[victim]          # a leaf: the rest stays connected
+    expected = sum(1 for c in col._condemned_set
+                   if c in db.store._data)
+    db.fork("k", uid, "back")                   # transitive rescue
+    assert col.report.barriered == expected     # pre-fix: expected + 1
+    while col.step(8) is not GCPhase.DONE:
+        pass
+
+
+def test_freeze_consumes_inventory_in_budget_slices(rng):
+    """Sliced inventory freeze (ROADMAP): the MARK->SWEEP transition
+    must consume at most ``budget`` inventory cids per step instead of
+    filtering the whole store in one pause."""
+    from repro.gc import IncrementalCollector
+    store = MemoryBackend()
+    db = ForkBase(store, PARAMS)
+    db.put("k", FBlob(rng.bytes(40_000)))
+    db.put("k", FBlob(rng.bytes(40_000)), "tmp")
+    db.remove("k", "tmp")
+    consumed = {"n": 0}
+
+    def counting_inventory():
+        def gen():
+            for cid in store.iter_cids():
+                consumed["n"] += 1
+                yield cid
+        return gen()
+
+    col = IncrementalCollector(store, branches=db.branches,
+                               inventory_fn=counting_inventory)
+    col.begin()
+    budget = 16
+    freeze_slices = 0
+    while col.phase is GCPhase.MARK:
+        before = consumed["n"]
+        col.step(budget)
+        took = consumed["n"] - before
+        assert took <= budget                   # bounded pause per slice
+        if took:
+            freeze_slices += 1
+    n_inventory = len(store)
+    assert consumed["n"] >= n_inventory         # whole inventory seen
+    assert freeze_slices >= (n_inventory + budget - 1) // budget
+    while col.step(budget) is not GCPhase.DONE:
+        pass
+    assert db.get("k").blob() is not None       # live value intact
+    assert col.report.swept_chunks > 0          # garbage reclaimed
+
+
+def test_put_during_freeze_is_not_condemned(rng):
+    """A chunk put (or dedup-adopted) while the inventory freeze is in
+    progress must never enter the condemned set — the barrier keeps
+    MARK semantics until SWEEP actually begins."""
+    db = ForkBase(MemoryBackend(), PARAMS)
+    data = rng.bytes(30_000)
+    db.put("k", FBlob(data), "tmp")
+    db.remove("k", "tmp")                       # detached: all condemned
+    db.put("other", FBlob(rng.bytes(30_000)))   # live ballast to mark
+    col = db.incremental_gc()
+    while col.phase is GCPhase.MARK and col._inv_iter is None:
+        col.step(1)                             # reach the freeze window
+    assert col.phase is GCPhase.MARK and col._inv_iter is not None
+    uid = db.put("k", FBlob(data))              # dedups onto condemned
+    while col.step(1) is not GCPhase.DONE:
+        pass
+    assert db.get("k", uid=uid).blob().read() == data
+
+
 def test_finished_collectors_do_not_accumulate(rng):
     db = ForkBase(MemoryBackend())
     for i in range(5):
