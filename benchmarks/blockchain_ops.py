@@ -60,3 +60,58 @@ def run():
         us = bench(commit, 20)
         emit(f"bc_commit_b{b}_{name}", us,
              f"throughput~{b * 1e6 / us:.0f}tx/s")
+
+
+def run_live() -> dict:
+    """``--live`` mode: ForkBaseLedger on the flat-state fast path vs
+    the archival per-key path — same op mix, same seed.  Returns the
+    metrics merged into BENCH_live.json by live_bench."""
+    rng = np.random.default_rng(0)
+    n_seed, b = 2048, 200
+    out: dict = {}
+    ledgers = {"arch": ForkBaseLedger(),
+               "live": ForkBaseLedger(live=True)}
+    for name, led in ledgers.items():
+        for i in range(n_seed):
+            led.write("kv", f"key{i}", rng.bytes(64))
+        led.commit()
+    for name, led in ledgers.items():
+        i = [0]
+
+        def read():
+            led.read("kv", f"key{i[0] % n_seed}"); i[0] += 1
+        out[f"bc_{name}_read_us"] = bench(read, 2000)
+
+        def write():
+            led.write("kv", f"key{i[0] % n_seed}", rng.bytes(64))
+            i[0] += 1
+        out[f"bc_{name}_write_us"] = bench(write, 2000)
+        led.commit()
+
+        def commit():
+            for j in range(b):
+                led.write("kv", f"key{(i[0] * b + j) % n_seed}",
+                          rng.bytes(64))
+            i[0] += 1
+            led.commit()
+        us = bench(commit, 10)
+        out[f"bc_{name}_commit_b{b}_us"] = us
+        out[f"bc_{name}_commit_tx_s"] = b * 1e6 / us
+        emit(f"bc_live_commit_b{b}_{name}", us,
+             f"throughput~{b * 1e6 / us:.0f}tx/s")
+    live = ledgers["live"]
+    out["bc_read_speedup"] = (out["bc_arch_read_us"]
+                              / out["bc_live_read_us"])
+    out["bc_commit_speedup"] = (out[f"bc_arch_commit_b{b}_us"]
+                                / out[f"bc_live_commit_b{b}_us"])
+    st = live.db.live("__state__").stats
+    out["bc_live_folds"] = st.folds
+    out["bc_live_fold_ms_avg"] = st.fold_seconds / max(1, st.folds) * 1e3
+    emit("bc_live_read", out["bc_live_read_us"],
+         f"x{out['bc_read_speedup']:.1f} vs archival")
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    run_live() if "--live" in sys.argv else run()

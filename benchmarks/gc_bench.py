@@ -119,6 +119,21 @@ def run() -> None:
     emit("gc_incremental_p99_pause", p99 * 1e6,
          f"{len(pauses)} slices, p99/STW = {p99 / max(stw_s, 1e-9):.1%}")
 
+    # ---- floating-garbage bound across consecutive epochs ----
+    # keys the committer put DURING the collection above were marked
+    # live by its barriers; orphaning them now makes them exactly the
+    # snapshot-at-the-beginning floating garbage the next epoch counts
+    for k in ("mut0", "mut1"):
+        dbi.remove(k, "master")
+    col2 = dbi.incremental_gc()
+    while col2.step(budget) is not GCPhase.DONE:
+        pass
+    out["inc_floating_garbage"] = col2.report.floating_garbage
+    out["inc_floating_swept"] = col2.report.swept_chunks
+    assert col2.report.floating_garbage > 0
+    emit("gc_floating_garbage", col2.report.floating_garbage,
+         f"of {col2.report.swept_chunks} swept survived one extra epoch")
+
     # ---- log compaction ----
     with tempfile.TemporaryDirectory() as tmp:
         log = os.path.join(tmp, "chunks.log")

@@ -1,0 +1,140 @@
+"""Forkless flat-state fast path -> BENCH_live.json.
+
+Core measurement: at >= 1M keys, live-table get/put (flat dict path)
+vs the per-op POS-Tree path on the same engine, plus the epoch fold —
+latency of the batched Merkle commitment, its share of epoch
+wall-clock, and the bit-identity of the folded root against a tree
+built directly from the same content.
+
+Also folds in the app-level live modes: ``blockchain_ops.run_live()``
+(ForkBaseLedger live vs archival read/write/commit) and
+``wiki_bench.run_live()`` (LiveWiki vs ForkBaseWiki vs Redis baseline),
+so BENCH_live.json is the one artifact for the live/archive split.
+
+``LIVE_BENCH_KEYS`` scales the core run (default 1_000_000).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import FMap, ForkBase
+from repro.live import EpochPolicy
+from repro.storage import MemoryBackend
+
+from .common import emit
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_live.json")
+
+KEY = b"state"
+
+
+def _key(i: int) -> bytes:
+    return b"k%07d" % i
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    n = int(os.environ.get("LIVE_BENCH_KEYS", str(1_000_000)))
+    out: dict = {"n_keys": n}
+    db = ForkBase(MemoryBackend())
+    t = db.live(KEY, policy=EpochPolicy(max_dirty_keys=None,
+                                        max_dirty_bytes=None))
+    model: dict[bytes, bytes] = {}
+
+    # ---- seed: n flat puts, then ONE epoch fold builds the archive ----
+    vals = rng.bytes(16 * n)
+    t0 = time.perf_counter()
+    for i in range(n):
+        k = _key(i)
+        v = vals[16 * i:16 * i + 16]
+        t.put(k, v)
+        model[k] = v
+    seed_s = time.perf_counter() - t0
+    rep = t.fold(context=b"seed")
+    out["seed_put_ops_s"] = n / seed_s
+    out["seed_fold_s"] = rep.seconds
+    emit("live_seed_fold", rep.seconds * 1e6,
+         f"{n} keys -> archive in one batched commit")
+
+    # ---- flat path: random gets (cache-hot, the serving shape) ----
+    n_get = min(200_000, n)
+    picks = rng.integers(0, n, size=n_get)
+    t0 = time.perf_counter()
+    for i in picks:
+        t.get(_key(int(i)))
+    flat_get_s = time.perf_counter() - t0
+    out["live_get_ops_s"] = n_get / flat_get_s
+    emit("live_get", flat_get_s / n_get * 1e6,
+         f"{out['live_get_ops_s']:.0f}ops/s")
+
+    # ---- flat path: random puts (the epoch's dirty delta) ----
+    n_put = min(100_000, n)
+    picks = rng.integers(0, n, size=n_put)
+    newv = rng.bytes(16 * n_put)
+    t0 = time.perf_counter()
+    for j, i in enumerate(picks):
+        k = _key(int(i))
+        v = newv[16 * j:16 * j + 16]
+        t.put(k, v)
+        model[k] = v
+    flat_put_s = time.perf_counter() - t0
+    out["live_put_ops_s"] = n_put / flat_put_s
+    emit("live_put", flat_put_s / n_put * 1e6,
+         f"{out['live_put_ops_s']:.0f}ops/s")
+
+    # ---- the epoch fold: one batched splice of the dirty delta ----
+    rep = t.fold(context=b"epoch1")
+    epoch_s = flat_put_s + rep.seconds
+    out["fold_epoch_ms"] = rep.seconds * 1e3
+    out["fold_dirty_keys"] = rep.folded_keys
+    out["fold_fraction_of_epoch"] = rep.seconds / epoch_s
+    emit("live_fold_epoch", rep.seconds * 1e6,
+         f"{rep.folded_keys} dirty keys, "
+         f"{out['fold_fraction_of_epoch']:.1%} of epoch wall-clock")
+
+    # ---- bit-identity: folded root == direct build from the model ----
+    direct = FMap(model, params=db.params).commit(MemoryBackend())
+    out["roots_bit_identical"] = bool(db.get(KEY).obj.data == direct)
+    assert out["roots_bit_identical"], "fold diverged from direct build"
+
+    # ---- tree path: the same ops through per-op POS-Tree commits ----
+    n_tput = 12
+    t0 = time.perf_counter()
+    for i in range(n_tput):
+        m = db.get(KEY).map()
+        m.set(_key(int(rng.integers(0, n))), rng.bytes(16))
+        db.put(KEY, m)
+    tree_put_s = (time.perf_counter() - t0) / n_tput
+    n_tget = 3000
+    m = db.get(KEY).map()
+    picks = rng.integers(0, n, size=n_tget)
+    t0 = time.perf_counter()
+    for i in picks:
+        m.get(_key(int(i)))
+    tree_get_s = (time.perf_counter() - t0) / n_tget
+    out["tree_get_ops_s"] = 1 / tree_get_s
+    out["tree_put_ops_s"] = 1 / tree_put_s
+    out["get_speedup"] = (n_get / flat_get_s) * tree_get_s
+    out["put_speedup"] = (n_put / flat_put_s) * tree_put_s
+    emit("tree_get", tree_get_s * 1e6,
+         f"flat is x{out['get_speedup']:.0f}")
+    emit("tree_put", tree_put_s * 1e6,
+         f"flat is x{out['put_speedup']:.0f}")
+
+    # ---- app-level live modes ----
+    from .blockchain_ops import run_live as bc_live
+    from .wiki_bench import run_live as wiki_live
+    out.update(bc_live())
+    out.update(wiki_live())
+
+    with open(BENCH_JSON, "w") as f:
+        json.dump(out, f, indent=2)
+
+
+if __name__ == "__main__":
+    run()

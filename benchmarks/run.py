@@ -11,7 +11,7 @@ import time
 
 MODULES = ["micro_ops", "put_breakdown", "gc_bench", "proof_bench",
            "scalability", "blockchain_ops", "merkle_trees", "scan_queries",
-           "wiki_bench", "analytics_bench", "ckpt_dedup"]
+           "wiki_bench", "analytics_bench", "ckpt_dedup", "live_bench"]
 
 
 def main() -> None:
@@ -31,10 +31,23 @@ def main() -> None:
             g = json.load(open(GC_JSON))
             print(f"# gc: mark {g['mark_chunks_per_s']:.0f} chunks/s, "
                   f"swept {g['swept_chunks']} "
-                  f"({g['reclaimed_bytes']} B); log "
+                  f"({g['reclaimed_bytes']} B); floating "
+                  f"{g.get('inc_floating_garbage', 0)} of "
+                  f"{g.get('inc_floating_swept', 0)} swept; log "
                   f"{g['log_bytes_before_compact']} -> "
                   f"{g['log_bytes_after_compact']} B; ckpt prune "
                   f"reclaimed {g['ckpt_reclaimed_bytes']} B")
+    if "live_bench" in only:
+        from .live_bench import BENCH_JSON as LIVE_JSON
+        if os.path.exists(LIVE_JSON):
+            ll = json.load(open(LIVE_JSON))
+            print(f"# live: {ll['n_keys']} keys -> get x"
+                  f"{ll['get_speedup']:.0f}, put x{ll['put_speedup']:.0f}"
+                  f" vs tree path; fold {ll['fold_epoch_ms']:.0f}ms "
+                  f"({ll['fold_fraction_of_epoch']:.1%} of epoch); "
+                  f"roots identical: {ll['roots_bit_identical']}; "
+                  f"ledger read x{ll['bc_read_speedup']:.1f}, wiki edit "
+                  f"x{ll['wiki_edit_speedup_vs_tree']:.1f}")
     if "proof_bench" in only:
         from .proof_bench import BENCH_JSON as PROOF_JSON
         if os.path.exists(PROOF_JSON):

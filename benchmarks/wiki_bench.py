@@ -83,6 +83,10 @@ def run():
         emit(f"wiki_read_{k}vers_redis",
              (time.perf_counter() - t0) / k * 1e6)
 
+    _fig15(rng)
+
+
+def _fig15(rng):
     # Fig. 15: skewed-workload storage distribution, 1LP vs 2LP
     for mode in ["1LP", "2LP"]:
         cl = Cluster(16, mode)
@@ -94,3 +98,72 @@ def run():
         cv = statistics.pstdev(dist) / max(1, statistics.mean(dist))
         emit(f"wiki_skew_{mode}_cv", cv * 100,
              f"bytes={min(dist)}..{max(dist)}")
+
+
+def run_live() -> dict:
+    """``--live`` mode: LiveWiki (flat page table, per-epoch folds) vs
+    ForkBaseWiki (per-edit tree commits) vs the Redis baseline — edit
+    and load throughput plus fold amortization.  Returns the metrics
+    merged into BENCH_live.json by live_bench."""
+    from repro.apps import LiveWiki
+    rng = np.random.default_rng(0)
+    n_pages, page_size, epochs, edits = 256, 2048, 4, 4
+    out: dict = {}
+    lw, fw, rw = LiveWiki(), ForkBaseWiki(), RedisWiki()
+    texts = {p: rng.bytes(page_size) for p in range(n_pages)}
+    for p, t in texts.items():
+        lw.create(f"page{p}", t)
+        fw.create(f"page{p}", t)
+        rw.create(f"page{p}", t)
+    lw.fold()
+
+    def edit_round(apply):
+        t0 = time.perf_counter()
+        for _ in range(edits):
+            for p in range(n_pages):
+                cur = texts[p]
+                pos = int(rng.integers(0, len(cur) - 256))
+                texts[p] = cur[:pos] + rng.bytes(200) + cur[pos + 200:]
+                apply(p, pos)
+        return time.perf_counter() - t0
+
+    live_s = fold_s = 0.0
+    for _ in range(epochs):
+        live_s += edit_round(lambda p, pos:
+                             lw.edit(f"page{p}", texts[p]))
+        t0 = time.perf_counter()
+        lw.fold()
+        fold_s += time.perf_counter() - t0
+    n_ops = epochs * edits * n_pages
+    out["wiki_live_edit_ops_s"] = n_ops / live_s
+    out["wiki_live_fold_ms_avg"] = fold_s / epochs * 1e3
+    out["wiki_live_fold_fraction"] = fold_s / (live_s + fold_s)
+    rng = np.random.default_rng(0)
+    texts = {p: fw.load(f"page{p}") for p in range(n_pages)}
+    tree_s = edit_round(
+        lambda p, pos: fw.edit(f"page{p}",
+                               lambda b, q=pos, s=texts[p][pos:pos + 200]:
+                               b.replace(q, 200, s)))
+    out["wiki_tree_edit_ops_s"] = n_ops / tree_s
+    redis_s = edit_round(lambda p, pos: rw.edit(f"page{p}", texts[p]))
+    out["wiki_redis_edit_ops_s"] = n_ops / redis_s
+    out["wiki_edit_speedup_vs_tree"] = tree_s / live_s
+    t0 = time.perf_counter()
+    for p in range(n_pages):
+        lw.load(f"page{p}")
+    out["wiki_live_load_us"] = (time.perf_counter() - t0) / n_pages * 1e6
+    t0 = time.perf_counter()
+    for p in range(n_pages):
+        fw.load(f"page{p}")
+    out["wiki_tree_load_us"] = (time.perf_counter() - t0) / n_pages * 1e6
+    out["wiki_load_speedup"] = (out["wiki_tree_load_us"]
+                                / out["wiki_live_load_us"])
+    emit("wiki_live_edit", live_s / n_ops * 1e6,
+         f"x{out['wiki_edit_speedup_vs_tree']:.1f} vs tree path, fold "
+         f"{out['wiki_live_fold_fraction']:.1%} of epoch")
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    run_live() if "--live" in sys.argv else run()

@@ -17,6 +17,16 @@ ForkBase-native structures:
 headline: this replaced 1918 lines of Hyperledger state-management code
 with ~18 lines of ForkBase calls — the commit path below is the analogous
 handful of Puts.
+
+``live=True`` switches the ledger onto the forkless flat-state fast
+path (repro.live): all state lives as "<contract>/<key>" -> value-bytes
+entries of ONE LiveTable on key ``__state__``.  Reads and writes are
+O(1) dict operations; ``commit`` folds the dirty delta into the backing
+POS-Tree map with a single batched splice, and the block references the
+folded root uid as its state root.  History granularity becomes
+per-block instead of per-op — exactly the ledger contract, since intra-
+block intermediate states were never observable anyway — and state
+proofs flatten to one membership proof (``prove_state_flat``).
 """
 from __future__ import annotations
 
@@ -34,18 +44,29 @@ class Tx:
     value: bytes | None = None
 
 
+STATE_KEY = "__state__"          # LiveTable key of the flat state (live mode)
+
+
 class ForkBaseLedger:
-    def __init__(self, db: ForkBase | None = None):
+    def __init__(self, db: ForkBase | None = None, *, live: bool = False):
         self.db = db if db is not None else ForkBase()
         self.height = 0
+        self.live = live
+        self._state = self.db.live(STATE_KEY) if live else None
         self._pending: list[Tx] = []
         self._writes: dict[tuple[str, str], bytes] = {}
+
+    @staticmethod
+    def _sk(contract: str, key: str) -> bytes:
+        return f"{contract}/{key}".encode()
 
     # ---------------------------------------------------- tx processing
     def read(self, contract: str, key: str) -> bytes | None:
         w = self._writes.get((contract, key))
         if w is not None:
             return w
+        if self.live:
+            return self._state.get(self._sk(contract, key))
         h = self.db.get(f"{contract}/{key}")
         return h.blob().read() if h is not None else None
 
@@ -58,6 +79,8 @@ class ForkBaseLedger:
     # ----------------------------------------------------------- commit
     def commit(self) -> bytes:
         """Batch-commit buffered writes into a new block."""
+        if self.live:
+            return self._commit_live()
         by_contract: dict[str, dict[str, bytes]] = {}
         for (c, k), v in self._writes.items():
             by_contract.setdefault(c, {})[k] = v
@@ -98,11 +121,43 @@ class ForkBaseLedger:
         self._writes.clear()
         return block_uid
 
+    def _commit_live(self) -> bytes:
+        """Live-mode commit: buffered writes land in the flat table
+        (O(1) each), ONE epoch fold batch-splices the delta into the
+        ``__state__`` POS-Tree map, and the block binds the folded root
+        uid — the flat-path replacement for steps 1-3 above."""
+        for (c, k), v in self._writes.items():
+            self._state.put(self._sk(c, k), v)
+        rep = self._state.fold(
+            context=json.dumps({"height": self.height}).encode())
+        blk = FMap({b"state": rep.uid,
+                    b"txs": json.dumps(
+                        [(t.contract, t.op, t.key) for t in self._pending]
+                    ).encode()})
+        block_uid = self.db.put("chain", blk,
+                                context=json.dumps(
+                                    {"height": self.height}).encode())
+        self.height += 1
+        self._pending.clear()
+        self._writes.clear()
+        return block_uid
+
     # -------------------------------------------------------- analytics
     def state_scan(self, contract: str, key: str, limit: int = 1 << 30):
         """History of one state key: follow the Blob version chain —
-        no chain replay, no pre-processing (paper Fig. 12a)."""
+        no chain replay, no pre-processing (paper Fig. 12a).  In live
+        mode the chain is the per-epoch version chain of the flat state
+        map (one entry per block that changed the key)."""
         out = []
+        if self.live:
+            sk = self._sk(contract, key)
+            prev = object()
+            for obj in self.db.track(STATE_KEY, "master", (0, limit)):
+                v = self.db.get(STATE_KEY, uid=obj.uid).map().get(sk)
+                if v is not None and v != prev:
+                    out.append((obj.uid, bytes(v)))
+                    prev = bytes(v)
+            return out
         for obj in self.db.track(f"{contract}/{key}", "master",
                                  (0, limit)):
             h = self.db.get(f"{contract}/{key}", uid=obj.uid)
@@ -110,13 +165,20 @@ class ForkBaseLedger:
         return out
 
     def block_scan(self, height: int):
-        """All states at a given block: walk that block's 2-level Map."""
+        """All states at a given block: walk that block's 2-level Map
+        (archive mode) or its flat state map (live mode)."""
         blocks = self.db.track("chain", "master")
         blk = blocks[self.height - 1 - height]
         bm = self.db.get("chain", uid=blk.uid).map()
         state_root = bm.get(b"state")
-        m1 = self.db.get("__l1__", uid=state_root).map()
         out = {}
+        if self.live:
+            m = self.db.get(STATE_KEY, uid=state_root).map()
+            for sk, v in m.items():
+                c, _, k = sk.decode().partition("/")
+                out[(c, k)] = bytes(v)
+            return out
+        m1 = self.db.get("__l1__", uid=state_root).map()
         for c, l2uid in m1.items():
             m2 = self.db.get(f"__l2__/{c.decode()}", uid=l2uid).map()
             for k, buid in m2.items():
@@ -199,6 +261,31 @@ class ForkBaseLedger:
                           l2_entry.to_bytes(), value_raw, value,
                           value_proofs)
 
+    def prove_state_flat(self, contract: str, key: str,
+                         height: int | None = None) -> "FlatStateProof":
+        """Live-mode stateless state proof: the two-level Map of
+        ``prove_state`` collapses to ONE membership proof into the flat
+        ``__state__`` map, whose leaf carries the value bytes directly —
+        chain-head lineage -> block meta -> state-root entry -> kv
+        entry.  Strictly smaller than the archival StateProof."""
+        if not self.live:
+            raise ValueError("prove_state_flat requires live mode")
+        height = self.height - 1 if height is None else height
+        db = self.db
+        block_uid = self.block_uid(height)
+        lineage = db.prove_lineage(db.get("chain").uid, block_uid)
+        block_raw = db.prove_version(block_uid)
+        state_entry = db.prove_member("chain", uid=block_uid,
+                                      item_key=b"state")
+        state_uid = bytes(db.get("chain", uid=block_uid).map()
+                          .get(b"state"))
+        state_raw = db.prove_version(state_uid)
+        kv_entry = db.prove_member(STATE_KEY, uid=state_uid,
+                                   item_key=self._sk(contract, key))
+        return FlatStateProof(lineage.to_bytes(), block_raw,
+                              state_entry.to_bytes(), state_raw,
+                              kv_entry.to_bytes())
+
 
 @dataclass(frozen=True)
 class StateProof:
@@ -224,6 +311,23 @@ class StateProof:
                 + len(self.l1_entry) + len(self.l2_raw)
                 + len(self.l2_entry) + len(self.value_raw)
                 + len(self.value) + sum(map(len, self.value_proofs)))
+
+
+@dataclass(frozen=True)
+class FlatStateProof:
+    """Live-mode counterpart of StateProof: head uid -> block -> flat
+    state-map root -> (key, value) leaf entry, value bytes inline."""
+    lineage: bytes            # head -> block meta-chunk chain
+    block_raw: bytes          # block version record
+    state_entry: bytes        # b"state" in the block Map
+    state_raw: bytes          # flat __state__ map version record
+    kv_entry: bytes           # "<contract>/<key>" -> value bytes
+
+    @property
+    def size(self) -> int:
+        return (len(self.lineage) + len(self.block_raw)
+                + len(self.state_entry) + len(self.state_raw)
+                + len(self.kv_entry))
 
 
 class LightClient:
@@ -319,6 +423,29 @@ class LightClient:
         if pos != len(proof.value) or (total or 0) != len(proof.value):
             raise InvalidProof("value proof does not cover the value")
         return len(chain) - 1, proof.value
+
+    def verify_state_flat(self, proof: FlatStateProof,
+                          contract: str, key: str) -> tuple[int, bytes]:
+        """Live-mode verifier: same trust threading as ``verify_state``
+        but through the flat state map — the kv leaf IS the value, so
+        there is no per-chunk tiling to check."""
+        from ..core.hashing import content_hash_many
+        from ..proof import (InvalidProof, LineageProof, verify_lineage,
+                             verify_member, verify_version)
+        lp = LineageProof.from_bytes(proof.lineage)
+        if not lp.raws:
+            raise InvalidProof("empty lineage")
+        block_uid = content_hash_many([lp.raws[-1]])[0]
+        chain = verify_lineage(self.head_uid, block_uid, lp)
+        block = verify_version(block_uid, proof.block_raw)
+        claim = verify_member(block.data, proof.state_entry)
+        if claim.key != b"state":
+            raise InvalidProof("state-root entry proves the wrong key")
+        state = verify_version(claim.value, proof.state_raw)
+        claim = verify_member(state.data, proof.kv_entry)
+        if claim.key != f"{contract}/{key}".encode():
+            raise InvalidProof("kv entry proves the wrong key")
+        return len(chain) - 1, bytes(claim.value)
 
 
 def _root_count(mp) -> int:

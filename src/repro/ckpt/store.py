@@ -70,7 +70,15 @@ class CheckpointStore:
     def save(self, state, branch: str, *, step: int,
              extra: dict | None = None) -> bytes:
         """Commit `state` (pytree of arrays) as one version on `branch`.
-        Returns the checkpoint uid."""
+        Returns the checkpoint uid.
+
+        A checkpoint save is an epoch boundary for the engine's live
+        tables (repro.live): any flat-path deltas are folded into their
+        POS-Trees first, so the checkpoint never lands on a store whose
+        durable state lags the served state."""
+        if getattr(self.db, "_live", None):
+            self.db.commit_epoch(context=json.dumps(
+                {"ckpt_step": step}).encode())
         leaves, _ = _leaf_paths(state)
         head = self.db.get(self.key, branch)
         manifest = (head.map() if head is not None else FMap())

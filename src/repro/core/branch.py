@@ -171,3 +171,13 @@ class BranchTable:
         Served from the incremental refcounts: O(distinct heads), not
         O(keys x branches)."""
         return set(self._head_rc)
+
+    def heads_of(self, key: bytes) -> set[bytes]:
+        """Live heads (TB + UB) of ONE key — the per-key slice of
+        ``all_heads`` the delta attest path pins for a dirty key, so an
+        attest after k head changes pins O(k) uids instead of
+        O(all heads)."""
+        kb = self._keys.get(bytes(key))
+        if kb is None:
+            return set()
+        return set(kb.tb.values()) | kb.ub

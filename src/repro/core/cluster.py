@@ -176,6 +176,15 @@ class Cluster:
                       for _ in range(n_nodes)]
         for i, node in enumerate(self.nodes):
             node.servlet = ForkBase(_RoutingStore(self, i), params)
+        # bloom spill path of the shared fence recovers cap-overflowed
+        # pins by filtering the cluster-wide current heads
+        self.gc_fence.heads_fn = self._all_heads
+
+    def _all_heads(self) -> set[bytes]:
+        out: set[bytes] = set()
+        for node in self.nodes:
+            out |= node.servlet.branches.all_heads()
+        return out
 
     # ---- dispatcher (layer 1) ----
     def _home_index(self, key) -> int:
@@ -207,6 +216,23 @@ class Cluster:
 
     def remove(self, key, branch):
         return self.servlet_of(key).remove(key, branch)
+
+    # ---- live fast path (repro.live), routed per key ----
+    def live(self, key, branch=None, *, policy=None):
+        """The key's home servlet's LiveTable — hot traffic is served
+        off the flat path while the POS-Tree archive (and its 2LP chunk
+        placement) is only touched at epoch folds."""
+        return self.servlet_of(key).live(key, branch, policy=policy)
+
+    def commit_epoch(self, context: bytes = b"", *, attest: bool = False,
+                     secret: bytes | None = None):
+        """Cluster epoch boundary: fold every servlet's dirty live
+        tables (each fold is one batched Put on its home servlet) and
+        optionally attest per servlet.  Returns the per-servlet
+        live.EpochReports."""
+        return [node.servlet.commit_epoch(context, attest=attest,
+                                          secret=secret)
+                for node in self.nodes]
 
     # ---- garbage collection (cluster-wide) ----
     def _gc_roots_hooks(self, pins, extra_roots, extra_hooks):

@@ -104,7 +104,20 @@ class ForkBase:
         self.pins = PinSet(on_pin=self._gc_root_barrier)
         # attestation/GC epoch handshake: attest() pins the heads it
         # commits to; collections root pins still in the grace window
+        # (heads_fn backs the fence's bloom spill path: pins past the
+        # memory cap are recovered by filtering current heads)
         self.gc_fence = EpochFence()
+        self.gc_fence.heads_fn = self.branches.all_heads
+        # live tables (flat-state fast path, repro.live): one per
+        # (key, branch) head, folded into the archive at epoch
+        # boundaries — see live() / commit_epoch()
+        self._live: dict = {}
+        # attest pin delta: keys whose heads moved since the last
+        # attest; the first attest of a fence epoch pins the full head
+        # baseline, subsequent ones pin only these keys' heads — O(k)
+        self._attest_dirty: set[bytes] = set()
+        self._attest_pin_epoch: int | None = None
+        self.branches.add_listener(self._on_head_mutation)
         # incremental attestation state (proof.delta), built lazily on
         # the first attest()/prove_head()
         self._delta_attestor = None
@@ -181,6 +194,71 @@ class ForkBase:
         return ValueHandle(self, load_fobject(self.store, uid,
                                               verify=verify))
 
+    # ------------------------------------------------- live fast path
+    def _on_head_mutation(self, key: bytes) -> None:
+        """Branch-table listener: feeds the attest pin delta and marks
+        this key's live tables stale (an external put / merge / fork
+        moved a head under them)."""
+        key = bytes(key)
+        self._attest_dirty.add(key)
+        if self._live:
+            for (k, _b), t in self._live.items():
+                if k == key:
+                    t._mark_stale()
+
+    def live(self, key: bytes, branch: str | None = None, *, policy=None):
+        """Flat-state fast path (repro.live): a per-(key, branch)
+        ``LiveTable`` absorbing puts and serving gets in O(1), folded
+        into the POS-Tree archive at epoch boundaries (``fold()`` /
+        ``commit_epoch()`` / the table's EpochPolicy thresholds).
+        Repeated calls return the same table.  Direct ``put``s on the
+        same (key, branch) stay legal: the table revalidates against
+        the moved head and its dirty overlay reapplies on top at the
+        next fold (last-writer-wins, as two successive puts would)."""
+        from ..live.table import LiveTable
+        key = _k(key)
+        branch = branch or DEFAULT_BRANCH
+        t = self._live.get((key, branch))
+        if t is None:
+            t = (LiveTable(self, key, branch, policy=policy)
+                 if policy is not None else LiveTable(self, key, branch))
+            self._live[(key, branch)] = t
+        return t
+
+    def commit_epoch(self, context: bytes = b"", *, attest: bool = False,
+                     secret: bytes | None = None):
+        """Epoch boundary: fold every dirty live table into the archive
+        (one batched Put per table) and publish the folded roots under
+        the EpochFence handshake — each new head is pinned at the
+        current collection epoch and forwarded to in-flight collections
+        exactly like an attested head, so no sweep can touch a chunk a
+        fold just referenced before the fold's proofs are servable.
+        With ``attest=True`` the epoch closes with a delta attestation
+        committing to the folded heads.  Returns a live.EpochReport."""
+        from ..live.table import EpochReport
+        rep = EpochReport()
+        for t in list(self._live.values()):
+            if t.dirty_count:
+                rep.folds.append(t.fold(context=context))
+        folded = rep.folded_uids
+        if folded:
+            cluster = getattr(self.store, "cluster", None)
+            fence = (cluster.gc_fence if cluster is not None
+                     else self.gc_fence)
+            fence.pin(folded)
+            self._gc_attest_fence(folded)
+        if attest:
+            rep.attestation = self.attest(context=context, secret=secret)
+        return rep
+
+    def _live_fold_key(self, key: bytes) -> None:
+        """Fork/merge of a dirty head folds first: the archive must hold
+        the state the new branch (or the merge input) is derived from."""
+        if self._live:
+            for (k, _b), t in list(self._live.items()):
+                if k == key and t.dirty_count:
+                    t.fold()
+
     # ----------------------------------------------------------- views
     def list_keys(self) -> list[bytes]:                      # M8
         return self.branches.keys()
@@ -195,6 +273,7 @@ class ForkBase:
     def fork(self, key: bytes, ref: str | bytes, new_branch: str) -> None:
         """M11 (from branch) / M12 (from uid)."""
         key = _k(key)
+        self._live_fold_key(key)      # fork of a dirty head folds first
         uid = (self.branches.head(key, ref) if isinstance(ref, str)
                else bytes(ref))
         if uid is None or (not isinstance(ref, str)
@@ -206,10 +285,19 @@ class ForkBase:
         self.branches.fork(key, new_branch, uid)
 
     def rename(self, key: bytes, old: str, new: str) -> None:   # M13
-        self.branches.rename(_k(key), old, new)
+        key = _k(key)
+        self.branches.rename(key, old, new)
+        t = self._live.pop((key, old), None)
+        if t is not None:             # live table follows its branch name
+            t.branch = new
+            self._live[(key, new)] = t
 
     def remove(self, key: bytes, branch: str) -> None:          # M14
-        self.branches.remove(_k(key), branch)
+        key = _k(key)
+        self.branches.remove(key, branch)
+        # the branch's unfolded live delta dies with the branch, exactly
+        # like its unswept archive chunks
+        self._live.pop((key, branch), None)
 
     # ---------------------------------------------------- space reclaim
     def gc(self, *, extra_roots: Iterable[bytes] = (),
@@ -379,6 +467,7 @@ class ForkBase:
         """M5 Merge(key, tgt_branch, ref_branch); M6 Merge(key, tgt_branch,
         ref_uid); M7 Merge(key, uid1, uid2, ...) for untagged heads."""
         key = _k(key)
+        self._live_fold_key(key)      # merge inputs come from the archive
         if isinstance(target, str):          # M5 / M6
             tgt_uid = self.branches.head(key, target)
             if tgt_uid is None:
@@ -546,11 +635,24 @@ class ForkBase:
         full build).  The attestation context carries the GC collector
         epoch, and the committed heads are pinned with the epoch fence:
         proofs against this attestation stay servable until the second
-        collection after now begins (gc.EpochFence handshake)."""
+        collection after now begins (gc.EpochFence handshake).
+
+        The pin path is O(k log n) too: the FIRST attest of each fence
+        epoch pins the full head baseline; every later attest in the
+        same epoch pins only the heads of keys mutated since (the
+        baseline pins already cover the unchanged ones at this epoch).
+        A collection advancing the fence epoch resets the baseline."""
         from ..proof.delta import pack_epoch
         cluster = getattr(self.store, "cluster", None)
         fence = cluster.gc_fence if cluster is not None else self.gc_fence
-        heads = self.branches.all_heads()
+        if self._attest_pin_epoch != fence.epoch:
+            heads = self.branches.all_heads()     # epoch baseline
+            self._attest_pin_epoch = fence.epoch
+        else:                                     # delta: O(dirty keys)
+            heads = set()
+            for k in self._attest_dirty:
+                heads |= self.branches.heads_of(k)
+        self._attest_dirty.clear()
         epoch = fence.pin(heads)
         self._gc_attest_fence(heads)
         return self._delta().attest(context=pack_epoch(epoch, context),

@@ -242,6 +242,19 @@ class FMap:
             keys = [k for k, _ in items]
             self._tree = POSTree.build_elements(store, ck.MAP, els, keys,
                                                 self.params)
+        elif len(self._ov) * 4 >= self._tree.total_count:
+            # epoch-fold fast path (live tables): when the delta
+            # dominates the tree, per-key find_key + clustered splice
+            # costs more than streaming the sorted merge of tree and
+            # overlay straight through build_elements — one put_many
+            # for all leaves, one content_hash_many dispatch per index
+            # level.  Node boundaries are a function of content alone,
+            # so the root is bit-identical to the splice path's.
+            items = list(self.items())
+            els = [ck.pack_kv(k, v) for k, v in items]
+            keys = [k for k, _ in items]
+            self._tree = POSTree.build_elements(store, ck.MAP, els, keys,
+                                                self.params)
         elif self._ov:
             edits = []
             for k in sorted(self._ov):

@@ -40,12 +40,19 @@ class GCReport:
     epoch: int = 0                # incremental collection epoch (0 = STW)
     slices: int = 0               # step() calls an incremental run took
     barriered: int = 0            # chunks shaded/rescued by write barriers
+    floating_garbage: int = 0     # swept chunks the PREVIOUS epoch kept
+    #   alive only because they were orphaned mid-collection (snapshot-
+    #   at-the-beginning trade); incremental epochs only — an STW
+    #   collection has no preceding live-set handoff to count against
 
     def __str__(self) -> str:
         dangling = (f", {self.missing_roots} dangling roots"
                     if self.missing_roots else "")
+        floating = (f", {self.floating_garbage} floating"
+                    if self.floating_garbage else "")
         inc = (f" [epoch {self.epoch}: {self.slices} slices, "
-               f"{self.barriered} barriered]" if self.epoch else "")
+               f"{self.barriered} barriered{floating}]"
+               if self.epoch else "")
         return (f"GC: {self.roots} roots, {self.live_chunks} live, "
                 f"{self.swept_chunks} swept "
                 f"({self.reclaimed_bytes / 1e6:.2f} MB) "

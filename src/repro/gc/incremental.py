@@ -68,24 +68,83 @@ from .collector import GCReport, chunk_refs, expand_refs, filter_roots
 from .pins import PinSet
 
 
+_BLOOM_BITS = 1 << 20        # 128 KiB bitset per overflowing epoch
+
+
+def _bloom_slots(uid: bytes) -> tuple[int, int, int, int]:
+    """Four bit positions for one uid.  uids are cryptographic hashes,
+    so four distinct 4-byte slices are independent uniform indices — no
+    extra hashing needed."""
+    u = uid if len(uid) >= 16 else (uid + bytes(16 - len(uid)))
+    return (int.from_bytes(u[0:4], "little") % _BLOOM_BITS,
+            int.from_bytes(u[4:8], "little") % _BLOOM_BITS,
+            int.from_bytes(u[8:12], "little") % _BLOOM_BITS,
+            int.from_bytes(u[12:16], "little") % _BLOOM_BITS)
+
+
+def _bloom_has(bloom: bytearray, uid: bytes) -> bool:
+    return all(bloom[s >> 3] & (1 << (s & 7)) for s in _bloom_slots(uid))
+
+
 class EpochFence:
     """Persistent attestation/collection epoch registry for one engine
     (or one cluster — collections there are cluster-wide).  Survives
     across collector instances so epoch numbers are monotone and pins
-    outlive the collection they were issued under."""
+    outlive the collection they were issued under.
 
-    def __init__(self, grace: int = 1):
+    Pin memory is bounded: each epoch keeps at most ``max_pins`` exact
+    uids; overflow spills into a per-epoch Bloom bitset (128 KiB) that
+    ``grace_roots`` intersects with the CURRENT heads (``heads_fn``).
+    The trade, stated plainly: a spilled pin protects its uid only
+    while the uid is still a live head when the collection starts — a
+    head both retired *and* spilled past the cap loses its grace-window
+    extension (its proofs may dangle one epoch early).  Bloom false
+    positives merely widen the root set, which is always safe.  With
+    the default cap (1M pins/epoch) the spill path never engages in
+    practice; ``max_pins=None`` disables the bound entirely.
+
+    The fence also carries the floating-garbage handoff between
+    consecutive incremental collections: ``last_live`` is the previous
+    epoch's shaded (live) set, against which the next epoch's sweep
+    counts ``GCReport.floating_garbage`` — chunks that survived one
+    collection only because they were orphaned mid-epoch."""
+
+    def __init__(self, grace: int = 1, max_pins: int | None = 1 << 20):
         self.epoch = 0                 # collection epochs begun so far
         self.grace = grace             # epochs a pin outlives its issue
+        self.max_pins = max_pins       # exact uids kept per epoch
+        self.heads_fn = None           # current-head enumerator (spill path)
         self._pins: dict[int, set[bytes]] = {}
+        self._blooms: dict[int, bytearray] = {}
+        self._spilled: dict[int, int] = {}
+        self.last_live: frozenset = frozenset()   # floating-garbage handoff
 
     def pin(self, uids) -> int:
         """Record the heads an attestation just committed to; returns
         the epoch number stamped into the attestation."""
         e = self.epoch
         if uids:
-            self._pins.setdefault(e, set()).update(bytes(u) for u in uids)
+            cur = self._pins.setdefault(e, set())
+            for u in uids:
+                u = bytes(u)
+                if u in cur:
+                    continue
+                if self.max_pins is None or len(cur) < self.max_pins:
+                    cur.add(u)
+                else:                       # spill: bounded-memory path
+                    bloom = self._blooms.get(e)
+                    if bloom is None:
+                        bloom = self._blooms[e] = bytearray(_BLOOM_BITS // 8)
+                    for s in _bloom_slots(u):
+                        bloom[s >> 3] |= 1 << (s & 7)
+                    self._spilled[e] = self._spilled.get(e, 0) + 1
         return e
+
+    def pin_count(self, epoch: int | None = None) -> int:
+        """Pins recorded for one epoch (exact + spilled) — the attest
+        path's O(k) claim is asserted against this."""
+        e = self.epoch if epoch is None else epoch
+        return len(self._pins.get(e, ())) + self._spilled.get(e, 0)
 
     def begin_epoch(self) -> int:
         """A collection is starting: advance the epoch and expire pins
@@ -93,14 +152,24 @@ class EpochFence:
         self.epoch += 1
         for e in [e for e in self._pins if e < self.epoch - self.grace]:
             del self._pins[e]
+        for e in [e for e in self._blooms if e < self.epoch - self.grace]:
+            del self._blooms[e]
+            self._spilled.pop(e, None)
         return self.epoch
 
     def grace_roots(self) -> set[bytes]:
         """Heads the starting collection must treat as roots: every pin
-        still inside the grace window."""
+        still inside the grace window.  Spilled pins are recovered by
+        filtering the current heads through the epoch blooms."""
         out: set[bytes] = set()
         for uids in self._pins.values():
             out |= uids
+        if self._blooms:
+            heads = (set(self.heads_fn()) if self.heads_fn is not None
+                     else set())
+            for bloom in self._blooms.values():
+                out.update(bytes(h) for h in heads
+                           if _bloom_has(bloom, bytes(h)))
         return out
 
 
@@ -154,6 +223,7 @@ class IncrementalCollector:
         self._inv_iter = None                   # sliced inventory freeze
         self._condemned: deque[bytes] = deque()
         self._condemned_set: set[bytes] = set()
+        self._floating_from: frozenset = frozenset()  # prev epoch's live set
 
     # ------------------------------------------------------------ state
     @property
@@ -190,6 +260,12 @@ class IncrementalCollector:
         else:
             self.epoch += 1
         frontier, missing = filter_roots(self.store, roots)
+        # floating-garbage bound: chunks this epoch sweeps that the
+        # PREVIOUS epoch marked live were orphaned mid-collection and
+        # survived exactly one extra epoch — the snapshot-at-the-
+        # beginning trade, now measured (GCReport.floating_garbage)
+        self._floating_from = (self.fence.last_live
+                               if self.fence is not None else frozenset())
         self.report = GCReport(roots=len(roots), missing_roots=missing,
                                epoch=self.epoch)
         self._shaded = set(frontier)
@@ -280,10 +356,12 @@ class IncrementalCollector:
             return self.phase
         self.report.slices += 1
         if self.phase is GCPhase.MARK:
+            spent = 0
             if self._gray:
                 self.report.mark_rounds += 1
                 batch = [self._gray.popleft()
                          for _ in range(min(budget, len(self._gray)))]
+                spent = len(batch)
                 fresh = expand_refs(self.store, batch, self.ref_hooks,
                                     self._shaded)
                 self._gray.extend(fresh)
@@ -293,8 +371,15 @@ class IncrementalCollector:
                     # frozen condemned set — pull them back out
                     for c in fresh:
                         self._condemned_set.discard(c)
-                return self.phase
-            self._freeze_slice(budget)
+                if self._gray or spent >= budget:
+                    return self.phase
+                # gray drained with budget to spare: spend the rest on
+                # the inventory freeze NOW.  A mutator putting between
+                # every slice re-grays a few chunks each time; if the
+                # freeze only ran on steps that BEGAN with an empty gray
+                # queue, such a mutator would livelock MARK forever —
+                # the collection must make monotone progress per slice.
+            self._freeze_slice(budget - spent)
             return self.phase
         # SWEEP: delete up to ``budget`` still-condemned cids
         batch: list[bytes] = []
@@ -307,6 +392,9 @@ class IncrementalCollector:
             n, freed = self._sweep_fn(sorted(batch))
             self.report.swept_chunks += n
             self.report.reclaimed_bytes += freed
+            if self._floating_from:
+                self.report.floating_garbage += sum(
+                    1 for c in batch if c in self._floating_from)
         if not self._condemned:
             self._finish()
         return self.phase
@@ -366,6 +454,11 @@ class IncrementalCollector:
             s.remove_put_listener(self._put_barrier)
         if self.report.swept_chunks:
             self._flush_fn()         # durable tombstones, like collect()
+        if self.fence is not None:
+            # floating-garbage handoff: the next epoch counts its sweep
+            # against this epoch's live set (one O(live) cid set held on
+            # the persistent fence between collections)
+            self.fence.last_live = frozenset(self._shaded)
         self._gray.clear()
         self._inv_iter = None
         self._condemned.clear()
