@@ -1,0 +1,161 @@
+"""Durable tiered storage benchmark -> merged into BENCH_storage.json.
+
+Measures the disk path the in-memory benchmarks deliberately exclude:
+
+  * segment-append put throughput (log-structured writes + fsync'd flush)
+  * cold-read latency (pread from segment files on a fresh process,
+    empty hot tier) vs hot-tier reads of the same working set
+  * tier hit ratio under a skewed read workload whose hot set fits the
+    memory tier while the full inventory does not
+  * compaction reclaim throughput: dead bytes dropped per second when
+    the GC sweep's flush feeds the segment compactor
+
+BENCH_storage.json is written wholesale by put_breakdown, so this module
+MERGES its ``durable_*`` keys into the existing file instead of
+replacing it."""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.chunk import encode_chunk
+from repro.storage import SegmentBackend, open_durable
+
+from .common import emit
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_storage.json")
+
+N_CHUNKS = 4096
+CHUNK_SIZE = 4096
+SEGMENT_BYTES = 1 << 20
+
+
+def _chunks(rng, n=N_CHUNKS, size=CHUNK_SIZE):
+    return [encode_chunk(3, rng.bytes(size)) for _ in range(n)]
+
+
+def durable_put(root: str, raws) -> dict:
+    be = SegmentBackend(os.path.join(root, "put"),
+                        segment_bytes=SEGMENT_BYTES)
+    mb = sum(len(r) for r in raws) / 1e6
+    t0 = time.perf_counter()
+    be.put_many(raws)
+    be.flush()                       # fsync: the durability point
+    s = time.perf_counter() - t0
+    out = {"durable_put_mb_s": mb / s,
+           "durable_segments": be.segment_count()}
+    be.close()
+    emit("durable_put_batched", s / len(raws) * 1e6,
+         f"{out['durable_put_mb_s']:.0f}MB/s "
+         f"{out['durable_segments']}segs")
+    return out
+
+
+def cold_vs_hot_read(root: str, raws) -> dict:
+    path = os.path.join(root, "tier")
+    t = open_durable(path, hot_bytes=256 << 20,
+                     segment_bytes=SEGMENT_BYTES)
+    cids = t.put_many(raws)
+    t.flush()
+    t.close()
+    # fresh process stand-in: empty hot tier, index rebuilt from footers
+    t = open_durable(path, hot_bytes=256 << 20,
+                     segment_bytes=SEGMENT_BYTES)
+    t0 = time.perf_counter()
+    t.get_many(cids)                 # every read is a pread miss
+    cold_s = time.perf_counter() - t0
+    assert t.stats.tier_misses == len(cids)
+    t0 = time.perf_counter()
+    t.get_many(cids)                 # promoted: pure hot-tier hits
+    hot_s = time.perf_counter() - t0
+    mb = sum(len(r) for r in raws) / 1e6
+    out = {"durable_cold_read_us": cold_s / len(cids) * 1e6,
+           "durable_hot_read_us": hot_s / len(cids) * 1e6,
+           "durable_cold_read_mb_s": mb / cold_s,
+           "durable_promotion_speedup": cold_s / hot_s}
+    t.close()
+    emit("durable_cold_read", out["durable_cold_read_us"],
+         f"{out['durable_cold_read_mb_s']:.0f}MB/s")
+    emit("durable_hot_read", out["durable_hot_read_us"],
+         f"x{out['durable_promotion_speedup']:.1f} vs cold")
+    return out
+
+
+def tier_hit_ratio(root: str, rng, raws) -> dict:
+    """Skewed reads: 90% of gets target 10% of the keys; the hot tier
+    holds ~20% of the inventory."""
+    hot_bytes = (N_CHUNKS * CHUNK_SIZE) // 5
+    t = open_durable(os.path.join(root, "skew"), hot_bytes=hot_bytes,
+                     segment_bytes=SEGMENT_BYTES)
+    cids = t.put_many(raws)
+    t.flush()
+    n_hot = max(1, len(cids) // 10)
+    reads = 20_000
+    picks = np.where(rng.random(reads) < 0.9,
+                     rng.integers(0, n_hot, reads),
+                     rng.integers(0, len(cids), reads))
+    t0 = time.perf_counter()
+    for i in picks:
+        t.get(cids[int(i)])
+    s = time.perf_counter() - t0
+    st = t.stats
+    out = {"durable_tier_hit_rate": st.tier_hit_rate,
+           "durable_skewed_read_us": s / reads * 1e6,
+           "durable_tier_demotions": st.tier_demotions,
+           "durable_tier_promotions": st.tier_promotions}
+    t.close()
+    emit("durable_skewed_read", out["durable_skewed_read_us"],
+         f"hit-rate {out['durable_tier_hit_rate']:.2f}")
+    return out
+
+
+def compaction_reclaim(root: str, rng, raws) -> dict:
+    """Delete 75% of a sealed-segment population (the GC sweep's output)
+    and time the compaction its flush feeds."""
+    be = SegmentBackend(os.path.join(root, "compact"),
+                        segment_bytes=SEGMENT_BYTES)
+    cids = be.put_many(raws)
+    be.flush()
+    doomed = [c for i, c in enumerate(cids) if i % 4]    # 75% dead
+    be.delete_many(doomed)
+    dead = be.dead_bytes()
+    disk0 = be.disk_bytes()
+    t0 = time.perf_counter()
+    be.flush()                       # sweep flush IS the compaction feed
+    s = time.perf_counter() - t0
+    freed = disk0 - be.disk_bytes()
+    out = {"durable_compaction_dead_bytes": dead,
+           "durable_compaction_freed_bytes": freed,
+           "durable_compaction_reclaim_frac": freed / max(1, dead),
+           "durable_compaction_mb_s": freed / 1e6 / max(s, 1e-9),
+           "durable_compactions": be.stats.compactions}
+    be.close()
+    emit("durable_compaction", s * 1e6,
+         f"{freed / 1e6:.1f}MB freed "
+         f"({out['durable_compaction_reclaim_frac']:.0%} of dead) "
+         f"{out['durable_compaction_mb_s']:.0f}MB/s")
+    return out
+
+
+def run():
+    rng = np.random.default_rng(11)
+    raws = _chunks(rng)
+    out = {}
+    with tempfile.TemporaryDirectory(prefix="durable_bench_") as root:
+        out.update(durable_put(root, raws))
+        out.update(cold_vs_hot_read(root, raws))
+        out.update(tier_hit_ratio(root, rng, raws))
+        out.update(compaction_reclaim(root, rng, raws))
+    merged = {}
+    if os.path.exists(BENCH_JSON):       # put_breakdown writes wholesale;
+        with open(BENCH_JSON) as f:      # we merge our keys in
+            merged = json.load(f)
+    merged.update(out)
+    with open(BENCH_JSON, "w") as f:
+        json.dump(merged, f, indent=2)
+    print(f"# merged durable_* into {BENCH_JSON}")

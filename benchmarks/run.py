@@ -9,9 +9,10 @@ import os
 import sys
 import time
 
-MODULES = ["micro_ops", "put_breakdown", "gc_bench", "proof_bench",
-           "scalability", "blockchain_ops", "merkle_trees", "scan_queries",
-           "wiki_bench", "analytics_bench", "ckpt_dedup", "live_bench"]
+MODULES = ["micro_ops", "put_breakdown", "durable_bench", "gc_bench",
+           "proof_bench", "scalability", "blockchain_ops", "merkle_trees",
+           "scan_queries", "wiki_bench", "analytics_bench", "ckpt_dedup",
+           "live_bench"]
 
 
 def main() -> None:
@@ -62,6 +63,21 @@ def main() -> None:
                   f"(x{p['batched_fphash_vs_per_proof_sha256']:.2f}); "
                   f"store verifies {p['store_verifies']} "
                   f"({p['store_verify_failures']} failures)")
+    if "durable_bench" in only:
+        from .durable_bench import BENCH_JSON as DUR_JSON
+        if os.path.exists(DUR_JSON):
+            d = json.load(open(DUR_JSON))
+            if "durable_put_mb_s" in d:
+                print(f"# durable: put {d['durable_put_mb_s']:.0f}MB/s "
+                      f"({d['durable_segments']} segments); cold read "
+                      f"{d['durable_cold_read_us']:.0f}us "
+                      f"({d['durable_cold_read_mb_s']:.0f}MB/s), hot "
+                      f"x{d['durable_promotion_speedup']:.1f}; skewed "
+                      f"hit-rate {d['durable_tier_hit_rate']:.2f}; "
+                      f"compaction freed "
+                      f"{d['durable_compaction_freed_bytes'] / 1e6:.1f}MB "
+                      f"({d['durable_compaction_reclaim_frac']:.0%} of "
+                      f"dead) at {d['durable_compaction_mb_s']:.0f}MB/s")
     if "put_breakdown" in only:
         from .put_breakdown import BENCH_JSON
         if os.path.exists(BENCH_JSON):

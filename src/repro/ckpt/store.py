@@ -60,11 +60,25 @@ def manifest_refs(raw: bytes) -> list[bytes]:
 
 
 class CheckpointStore:
-    def __init__(self, db: ForkBase | None = None, key: str = "ckpt"):
-        self.db = db if db is not None else ForkBase()
+    def __init__(self, db: ForkBase | None = None, key: str = "ckpt", *,
+                 durable_root: str | None = None):
+        """``durable_root`` (without an explicit ``db``) opens the engine
+        over the durable tiered store (storage.durable): checkpoints
+        survive process death, and ``sync()`` is the barrier that makes
+        a just-saved step restorable after a crash."""
+        if db is None:
+            db = (ForkBase(durable_root=durable_root)
+                  if durable_root is not None else ForkBase())
+        self.db = db
         self.key = key
         if manifest_refs not in self.db.gc_hooks:
             self.db.gc_hooks.append(manifest_refs)
+
+    def sync(self) -> None:
+        """Durability barrier: flush chunks + snapshot branch heads (see
+        ``ForkBase.sync``).  A restore after a crash sees exactly the
+        checkpoints saved before the last ``sync()``."""
+        self.db.sync()
 
     # ------------------------------------------------------------- save
     def save(self, state, branch: str, *, step: int,

@@ -3,6 +3,7 @@ name -> head uid) and UB-table (untagged branch heads = leaves of the
 object derivation graph)."""
 from __future__ import annotations
 
+import json
 from dataclasses import dataclass, field
 
 DEFAULT_BRANCH = "master"
@@ -181,3 +182,32 @@ class BranchTable:
         if kb is None:
             return set()
         return set(kb.tb.values()) | kb.ub
+
+    # ---- durable head persistence (storage.durable) ----
+    def snapshot(self) -> bytes:
+        """Canonical serialization of the full head state (TB + UB +
+        foc), byte-identical for identical state — the unit the durable
+        engine persists with ``write_durably`` on every ``sync()``."""
+        doc = {k.hex(): {"tb": {n: u.hex() for n, u in kb.tb.items()},
+                         "ub": sorted(u.hex() for u in kb.ub),
+                         "foc": sorted(u.hex() for u in kb.foc)}
+               for k, kb in sorted(self._keys.items())}
+        return json.dumps(doc, sort_keys=True,
+                          separators=(",", ":")).encode()
+
+    def restore(self, blob: bytes) -> None:
+        """Load a ``snapshot()`` into this (empty, freshly constructed)
+        table, rebuilding the incremental head refcounts.  Listeners are
+        not fired: restoring is reopening, not mutating."""
+        doc = json.loads(blob)
+        for khex, d in doc.items():
+            kb = self.of(bytes.fromhex(khex))
+            for name, uhex in d["tb"].items():
+                uid = bytes.fromhex(uhex)
+                kb.tb[name] = uid
+                self._inc(uid)
+            for uhex in d["ub"]:
+                uid = bytes.fromhex(uhex)
+                kb.ub.add(uid)
+                self._inc(uid)
+            kb.foc.update(bytes.fromhex(u) for u in d["foc"])

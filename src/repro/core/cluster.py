@@ -161,10 +161,14 @@ class Cluster:
 
     def __init__(self, n_nodes: int = 4, mode: str = "2LP",
                  params: ChunkParams = DEFAULT_PARAMS,
-                 verify: bool = False):
+                 verify: bool = False, *,
+                 durable_root: str | None = None,
+                 hot_bytes: int = 64 << 20,
+                 segment_bytes: int = 4 << 20):
         assert mode in ("1LP", "2LP")
         self.mode = mode
         self.params = params
+        self.durable_root = durable_root
         self.index: dict[bytes, int] = {}   # master's chunk location map
         # one attestation/GC epoch fence for the whole cluster:
         # collections are cluster-wide, so servlet attestations pin into
@@ -172,13 +176,65 @@ class Cluster:
         from ..gc.incremental import EpochFence
         self.gc_fence = EpochFence()
         self._audit_daemon = None
-        self.nodes = [Node(ChunkStore(verify=verify), NodeStats())
-                      for _ in range(n_nodes)]
+        if durable_root is None:
+            stores = [ChunkStore(verify=verify) for _ in range(n_nodes)]
+        else:
+            # durable pool: each node's chunks live in a tiered segment
+            # store under ``durable_root/node-XX``; reopening the same
+            # root resumes the cluster (see ``sync``/``_restore_durable``)
+            from ..storage.durable import open_durable
+            stores = [open_durable(self._node_root(i), hot_bytes=hot_bytes,
+                                   segment_bytes=segment_bytes,
+                                   verify=verify)
+                      for i in range(n_nodes)]
+        self.nodes = [Node(store, NodeStats()) for store in stores]
         for i, node in enumerate(self.nodes):
             node.servlet = ForkBase(_RoutingStore(self, i), params)
+        if durable_root is not None:
+            self._restore_durable()
         # bloom spill path of the shared fence recovers cap-overflowed
         # pins by filtering the cluster-wide current heads
         self.gc_fence.heads_fn = self._all_heads
+
+    # ---- durable pool (storage.durable) ----
+    def _node_root(self, i: int) -> str:
+        import os
+        return os.path.join(self.durable_root, f"node-{i:02d}")
+
+    def _heads_path(self, i: int) -> str:
+        import os
+        return os.path.join(self._node_root(i), "heads.json")
+
+    def _restore_durable(self) -> None:
+        """Resume a durable cluster: reload each servlet's branch heads
+        from its last ``sync()`` snapshot and rebuild the master chunk
+        location map by streaming every node store's cids (meta chunks
+        are pinned to their home servlet, so the hash-placement fallback
+        of ``_location`` alone would misroute them after a restart)."""
+        import os
+        for i, node in enumerate(self.nodes):
+            path = self._heads_path(i)
+            if os.path.exists(path):
+                with open(path, "rb") as f:
+                    node.servlet.branches.restore(f.read())
+            for cid in node.store.iter_cids():
+                self.index[cid] = i
+            node.stats.chunks = len(node.store)
+            node.stats.chunk_bytes = node.store.stats.physical_bytes
+            node.stats.build_work = node.stats.chunk_bytes
+
+    def sync(self) -> None:
+        """Cluster durability point: flush every node store (hot-tier
+        write-back + segment fsync + GC-fed compaction) and atomically
+        snapshot every servlet's branch heads.  After ``sync()``, a new
+        ``Cluster(durable_root=...)`` over the same root resumes with
+        bit-identical heads.  A plain flush when not durable."""
+        for i, node in enumerate(self.nodes):
+            node.store.flush()
+            if self.durable_root is not None:
+                from ..storage.durable import write_durably
+                write_durably(self._heads_path(i),
+                              node.servlet.branches.snapshot())
 
     def _all_heads(self) -> set[bytes]:
         out: set[bytes] = set()
@@ -284,16 +340,21 @@ class Cluster:
         for cid, node in self.index.items():
             if cid not in live:
                 by_node.setdefault(node, []).append(cid)
-        swept = reclaimed = 0
+        swept = reclaimed = compacted = 0
         for ni, cs in by_node.items():
             n, freed = _delete_on_node(self, ni, sorted(cs))
             swept += n
             reclaimed += freed
-            self.nodes[ni].store.flush()  # durable tombstones if logged
+            nst = self.nodes[ni].store.stats
+            c0 = nst.compacted_bytes
+            self.nodes[ni].store.flush()  # durable tombstones if logged;
+            #   on a durable store this flush feeds the segment compactor
+            compacted += nst.compacted_bytes - c0
         self._rebase_build_work()
         return GCReport(roots=len(roots), live_chunks=len(live),
                         swept_chunks=swept, reclaimed_bytes=reclaimed,
-                        mark_rounds=rounds, missing_roots=missing)
+                        mark_rounds=rounds, missing_roots=missing,
+                        compacted_bytes=compacted)
 
     def incremental_gc(self, pins=None, extra_roots=(), extra_hooks=()):
         """Begin a cluster-wide incremental collection epoch and return

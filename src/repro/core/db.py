@@ -9,6 +9,7 @@ Both fork semantics are first-class:
 """
 from __future__ import annotations
 
+import os
 from typing import Iterable
 
 from . import chunk as ck
@@ -89,13 +90,31 @@ class ForkBase:
 
     def __init__(self, store: StorageBackend | None = None,
                  params: ChunkParams = DEFAULT_PARAMS, *,
-                 verify_get: bool = False):
+                 verify_get: bool = False,
+                 durable_root: str | None = None,
+                 hot_bytes: int = 64 << 20,
+                 segment_bytes: int = 4 << 20):
+        # durable mode: chunks live in the tiered segment store under
+        # ``durable_root`` and branch heads are reloaded from the last
+        # ``sync()`` snapshot — reopening the same root resumes the
+        # engine with bit-identical heads
+        if store is None and durable_root is not None:
+            from ..storage.durable import open_durable
+            store = open_durable(durable_root, hot_bytes=hot_bytes,
+                                 segment_bytes=segment_bytes,
+                                 verify=verify_get)
+        self._durable_root = durable_root
         self.store = store if store is not None else ChunkStore()
         self.params = params
         # verify-on-get: every Get re-hashes the meta chunk against its
         # uid (per-call ``verify=`` overrides; checks count in StoreStats)
         self.verify_get = verify_get
         self.branches = BranchTable()
+        if durable_root is not None:
+            head_path = _heads_path(durable_root)
+            if os.path.exists(head_path):
+                with open(head_path, "rb") as f:
+                    self.branches.restore(f.read())
         # explicit GC roots: in-flight readers / retention holds pin the
         # uids they need across a concurrent collect(); pinning mid-
         # collection fires the incremental root barrier
@@ -298,6 +317,20 @@ class ForkBase:
         # the branch's unfolded live delta dies with the branch, exactly
         # like its unswept archive chunks
         self._live.pop((key, branch), None)
+
+    # ------------------------------------------------------- durability
+    def sync(self) -> None:
+        """Durability point for a durable-root engine: flush the store
+        (demote the hot tier, fsync segments, run GC-fed compaction)
+        and atomically snapshot the branch heads — after ``sync()``
+        returns, reopening the same root resumes with bit-identical
+        heads and every chunk reachable from them.  A no-op flush on a
+        non-durable engine."""
+        self.store.flush()
+        if self._durable_root is not None:
+            from ..storage.durable import write_durably
+            write_durably(_heads_path(self._durable_root),
+                          self.branches.snapshot())
 
     # ---------------------------------------------------- space reclaim
     def gc(self, *, extra_roots: Iterable[bytes] = (),
@@ -697,3 +730,7 @@ class ForkBase:
 
 def _k(key) -> bytes:
     return key.encode() if isinstance(key, str) else bytes(key)
+
+
+def _heads_path(root: str) -> str:
+    return os.path.join(root, "heads.json")

@@ -44,18 +44,22 @@ class GCReport:
     #   alive only because they were orphaned mid-collection (snapshot-
     #   at-the-beginning trade); incremental epochs only — an STW
     #   collection has no preceding live-set handoff to count against
+    compacted_bytes: int = 0      # segment-file bytes reclaimed by the
+    #   compaction this sweep's flush fed (durable backends only)
 
     def __str__(self) -> str:
         dangling = (f", {self.missing_roots} dangling roots"
                     if self.missing_roots else "")
         floating = (f", {self.floating_garbage} floating"
                     if self.floating_garbage else "")
+        compacted = (f", {self.compacted_bytes / 1e6:.2f} MB compacted"
+                     if self.compacted_bytes else "")
         inc = (f" [epoch {self.epoch}: {self.slices} slices, "
                f"{self.barriered} barriered{floating}]"
                if self.epoch else "")
         return (f"GC: {self.roots} roots, {self.live_chunks} live, "
                 f"{self.swept_chunks} swept "
-                f"({self.reclaimed_bytes / 1e6:.2f} MB) "
+                f"({self.reclaimed_bytes / 1e6:.2f} MB{compacted}) "
                 f"in {self.mark_rounds} mark rounds{dangling}{inc}")
 
 
@@ -172,7 +176,12 @@ class GarbageCollector:
     def collect(self) -> GCReport:
         roots = self.root_set()
         live, rounds, missing = self.mark(roots)
+        # the sweep's flush feeds the durable-store compactor; report
+        # the segment bytes it dropped alongside the logical reclaim
+        c0 = self.store.stats.compacted_bytes
         swept, reclaimed = self.sweep(live)
         return GCReport(roots=len(roots), live_chunks=len(live),
                         swept_chunks=swept, reclaimed_bytes=reclaimed,
-                        mark_rounds=rounds, missing_roots=missing)
+                        mark_rounds=rounds, missing_roots=missing,
+                        compacted_bytes=(self.store.stats.compacted_bytes
+                                         - c0))

@@ -449,11 +449,23 @@ class IncrementalCollector:
         n = self.store.delete_many(cids)
         return n, self.store.stats.reclaimed_bytes - r0
 
+    def _compacted_total(self) -> int:
+        """Segment-compaction bytes across every store the finish flush
+        touches (per-node on a cluster, else the engine's store)."""
+        cluster = getattr(self.store, "cluster", None)
+        if cluster is not None:
+            return sum(n.store.stats.compacted_bytes
+                       for n in cluster.nodes)
+        return self.store.stats.compacted_bytes
+
     def _finish(self) -> None:
         for s in self._barrier_stores:
             s.remove_put_listener(self._put_barrier)
         if self.report.swept_chunks:
-            self._flush_fn()         # durable tombstones, like collect()
+            c0 = self._compacted_total()
+            self._flush_fn()         # durable tombstones, like collect();
+            #   on a durable store this flush IS the compaction feed
+            self.report.compacted_bytes += self._compacted_total() - c0
         if self.fence is not None:
             # floating-garbage handoff: the next epoch counts its sweep
             # against this epoch's live set (one O(live) cid set held on

@@ -59,10 +59,20 @@ class StoreStats:
     logical_bytes: int = 0        # sum of bytes across all Puts
     physical_bytes: int = 0       # bytes actually stored (post-dedup)
     reclaimed_bytes: int = 0      # physical bytes freed by deletes
+    tier_hits: int = 0            # reads served by the hot (memory) tier
+    tier_misses: int = 0          # reads that fell through to the cold tier
+    tier_demotions: int = 0       # chunks written back to the cold tier
+    tier_promotions: int = 0      # cold chunks re-admitted hot on read
+    compactions: int = 0          # segment rewrites (log-structured stores)
+    compacted_bytes: int = 0      # file bytes reclaimed by those rewrites
 
     @property
     def dedup_ratio(self) -> float:
         return self.logical_bytes / max(1, self.physical_bytes)
+
+    @property
+    def tier_hit_rate(self) -> float:
+        return self.tier_hits / max(1, self.tier_hits + self.tier_misses)
 
 
 @runtime_checkable

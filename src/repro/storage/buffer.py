@@ -100,10 +100,19 @@ class WriteBuffer(BackendBase):
     def iter_cids(self):
         if self._closed:
             return self.inner.iter_cids()
-        pending = list(self._pending)
-        seen = set(pending)
-        return iter(pending + [c for c in self.inner.iter_cids()
-                               if c not in seen])
+
+        def chain():
+            # snapshot only the (small) pending overlay; the inner
+            # stream is consumed lazily so a segment/sharded inner can
+            # keep yielding per-partition without one store-wide copy
+            pending = list(self._pending)
+            seen = set(pending)
+            yield from pending
+            for cid in self.inner.iter_cids():
+                if cid not in seen:
+                    yield cid
+
+        return chain()
 
     # ------------------------------------------------------------- flush
     def flush(self) -> None:

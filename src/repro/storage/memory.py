@@ -15,9 +15,24 @@ import struct
 
 from .backend import (BackendBase, ChunkMissing, TamperedChunk,
                       resolve_cids)
+from .durable.fsutil import replace_durably
 
 _LEN = struct.Struct("<I")
 _TOMBSTONE = 0xFFFFFFFF
+
+# cid_of lives in repro.core, which imports repro.storage back through
+# the chunkstore facade — a module-scope import would cycle, so the
+# binding is resolved once on first use and cached here instead of being
+# re-imported on every put_many/get_many/_replay call
+_cid_of = None
+
+
+def _chunk_cid_of():
+    global _cid_of
+    if _cid_of is None:
+        from ..core.chunk import cid_of
+        _cid_of = cid_of
+    return _cid_of
 
 
 class MemoryBackend(BackendBase):
@@ -48,7 +63,7 @@ class MemoryBackend(BackendBase):
         if self.verify and provided:
             # only caller-supplied cids can mismatch; self-computed ones
             # would just re-hash the same bytes
-            from ..core.chunk import cid_of
+            cid_of = _chunk_cid_of()
             for i in provided:
                 self.stats.verifies += 1
                 if out[i] != cid_of(raws[i]):
@@ -72,6 +87,7 @@ class MemoryBackend(BackendBase):
     def get_many(self, cids) -> list[bytes]:
         st = self.stats
         st.get_batches += 1
+        cid_of = _chunk_cid_of() if self.verify else None
         out = []
         for cid in cids:
             st.gets += 1
@@ -79,7 +95,6 @@ class MemoryBackend(BackendBase):
             if raw is None:
                 raise ChunkMissing(cid)
             if self.verify:
-                from ..core.chunk import cid_of
                 st.verifies += 1
                 if cid_of(raw) != cid:
                     st.verify_failures += 1
@@ -125,7 +140,7 @@ class MemoryBackend(BackendBase):
         in ``deletes`` / ``reclaimed_bytes`` — without this, dedup and
         space ratios are wrong after every reopen (puts/logical reset
         to zero, deletes invisible)."""
-        from ..core.chunk import cid_of
+        cid_of = _chunk_cid_of()
         from ..core.hashing import CID_LEN
         st = self.stats
         good = 0                       # offset after the last whole record
@@ -175,8 +190,9 @@ class MemoryBackend(BackendBase):
     def compact_log(self) -> tuple[int, int]:
         """Rewrite the log with only the live chunks — dead records and
         tombstones drop out — then atomically replace it (write + fsync +
-        rename, so a crash mid-compaction leaves the old log intact).
-        Returns (bytes_before, bytes_after)."""
+        rename + parent-dir fsync via ``replace_durably``; without the
+        dirsync a crash after the rename could lose the new file's
+        directory entry).  Returns (bytes_before, bytes_after)."""
         if self._log is None:
             return (0, 0)
         before = self.log_size()
@@ -187,6 +203,6 @@ class MemoryBackend(BackendBase):
             f.flush()
             os.fsync(f.fileno())
         self._log.close()
-        os.replace(tmp, self._log_path)
+        replace_durably(tmp, self._log_path)
         self._log = open(self._log_path, "ab")
         return before, os.path.getsize(self._log_path)

@@ -1,19 +1,22 @@
 """Backend conformance: one shared put/get/has/delete/dedup/stats suite
 over every StorageBackend implementation (memory, log, LRU, replicated,
-sharded, cluster routing), plus the batched-pipeline invariants:
-a value with N chunks commits via one put_many batch, and the
-vectorized fphash path matches the per-chunk kernel bit-for-bit.
-The delete/GC cases cover the sweep verb added for garbage collection:
-chunks leave every replica/shard/cache coherently and stats shrink."""
+sharded, cluster routing, durable segment, tiered), plus the
+batched-pipeline invariants: a value with N chunks commits via one
+put_many batch, and the vectorized fphash path matches the per-chunk
+kernel bit-for-bit.  The delete/GC cases cover the sweep verb added for
+garbage collection: chunks leave every replica/shard/cache coherently
+and stats shrink."""
 import pytest
 
 from repro.core import Cluster, ForkBase, FBlob, FMap
 from repro.core.chunk import cid_of, encode_chunk
 from repro.storage import (ChunkMissing, LRUCacheBackend, MemoryBackend,
-                           ReplicatedBackend, ShardedBackend, StorageBackend,
-                           TamperedChunk, WriteBuffer, make_backend)
+                           ReplicatedBackend, SegmentBackend, ShardedBackend,
+                           StorageBackend, TamperedChunk, TieredBackend,
+                           WriteBuffer, make_backend)
 
-BACKENDS = ["memory", "log", "lru", "replicated", "sharded", "routing"]
+BACKENDS = ["memory", "log", "lru", "replicated", "sharded", "routing",
+            "segment", "tiered"]
 
 
 @pytest.fixture
@@ -31,6 +34,14 @@ def backend(request, tmp_path):
         return ShardedBackend(4)
     if name == "routing":
         return Cluster(3).nodes[0].servlet.store
+    # small segments / hot tier so multi-segment sealing, demotion and
+    # promotion all run inside the shared suite
+    if name == "segment":
+        return SegmentBackend(str(tmp_path / "segs"), segment_bytes=8 << 10)
+    if name == "tiered":
+        return TieredBackend(
+            SegmentBackend(str(tmp_path / "cold"), segment_bytes=8 << 10),
+            hot_bytes=16 << 10)
     raise AssertionError(name)
 
 
@@ -489,8 +500,8 @@ def test_replay_stats_match_fresh_reexecution(tmp_path, rng):
 
 @pytest.fixture
 def verified_backend(request, tmp_path):
-    """The same six stacks, with integrity verification enabled in every
-    leaf store (and on the cluster nodes)."""
+    """The same eight stacks, with integrity verification enabled in
+    every leaf store (and on the cluster nodes)."""
     name = request.param
     vmem = lambda: MemoryBackend(verify=True)  # noqa: E731
     if name == "memory":
@@ -506,15 +517,26 @@ def verified_backend(request, tmp_path):
         return ShardedBackend(4, factory=vmem)
     if name == "routing":
         return Cluster(3, verify=True).nodes[0].servlet.store
+    if name == "segment":
+        return SegmentBackend(str(tmp_path / "segs"),
+                              segment_bytes=8 << 10, verify=True)
+    if name == "tiered":
+        return TieredBackend(
+            SegmentBackend(str(tmp_path / "cold"), segment_bytes=8 << 10,
+                           verify=True),
+            hot_bytes=16 << 10, verify=True)
     raise AssertionError(name)
 
 
 def _leaf_stores(backend):
-    """Every MemoryBackend a stack bottoms out in."""
-    if isinstance(backend, MemoryBackend):
+    """Every leaf store (MemoryBackend / SegmentBackend) a stack bottoms
+    out in."""
+    if isinstance(backend, (MemoryBackend, SegmentBackend)):
         return [backend]
     if isinstance(backend, LRUCacheBackend):
         return _leaf_stores(backend.inner)
+    if isinstance(backend, TieredBackend):
+        return _leaf_stores(backend.cold)
     if isinstance(backend, ReplicatedBackend):
         return [leaf for s in backend.stores for leaf in _leaf_stores(s)]
     if isinstance(backend, ShardedBackend):
@@ -525,20 +547,45 @@ def _leaf_stores(backend):
     raise AssertionError(type(backend))
 
 
+def _flip_leaf(leaf, cid) -> int:
+    """Flip one byte of ``cid``'s raw inside one leaf store (in the dict
+    for MemoryBackend, ON DISK for SegmentBackend)."""
+    if isinstance(leaf, MemoryBackend):
+        raw = leaf._data.get(cid)
+        if raw is None:
+            return 0
+        leaf._data[cid] = raw[:-1] + bytes([raw[-1] ^ 0x55])
+        return 1
+    gen = leaf._index.get(cid)
+    if gen is None:
+        return 0
+    leaf.flush()                        # the record must be on disk to flip
+    seg = leaf._segments[gen]
+    off, ln = seg.live[cid]
+    with open(seg.path, "r+b") as f:
+        f.seek(off + ln - 1)
+        last = f.read(1)[0]
+        f.seek(off + ln - 1)
+        f.write(bytes([last ^ 0x55]))
+    return 1
+
+
 def _corrupt_everywhere(backend, cid):
     """Flip one byte in EVERY materialization of ``cid`` — all replicas,
-    the owning shard/node, AND any resident cache copy (a cache must not
-    be a verification hole)."""
+    the owning shard/node, any resident cache copy, AND the hot-tier
+    copy (a cache/hot tier must not be a verification hole)."""
     hit = 0
     for leaf in _leaf_stores(backend):
-        raw = leaf._data.get(cid)
-        if raw is not None:
-            leaf._data[cid] = raw[:-1] + bytes([raw[-1] ^ 0x55])
-            hit += 1
+        hit += _flip_leaf(leaf, cid)
     if isinstance(backend, LRUCacheBackend):
         raw = backend._cache.get(cid)
         if raw is not None:
             backend._cache[cid] = raw[:-1] + bytes([raw[-1] ^ 0x55])
+            hit += 1
+    if isinstance(backend, TieredBackend):
+        raw = backend._hot.get(cid)
+        if raw is not None:
+            backend._hot[cid] = raw[:-1] + bytes([raw[-1] ^ 0x55])
             hit += 1
     assert hit > 0
     return hit
@@ -566,9 +613,10 @@ def test_corruption_surfaces_tampered_chunk(verified_backend, rng):
 
 
 def _stack_stat(be, name):
-    total = sum(getattr(leaf.stats, name) for leaf in _leaf_stores(be))
-    if not isinstance(be, MemoryBackend):
-        total += getattr(be.stats, name)        # cache-layer checks
+    leaves = _leaf_stores(be)
+    total = sum(getattr(leaf.stats, name) for leaf in leaves)
+    if all(leaf is not be for leaf in leaves):
+        total += getattr(be.stats, name)        # cache/tier-layer checks
     return total
 
 
@@ -690,7 +738,9 @@ def test_make_backend_specs(backend, tmp_path, rng):
     for spec, kw in [("memory", {}), ("lru+memory", {}),
                      ("lru+sharded", {"shards": 2}),
                      ("replicated", {"n": 3, "k": 2}),
-                     ("log", {"log_path": str(tmp_path / "l.log")})]:
+                     ("log", {"log_path": str(tmp_path / "l.log")}),
+                     ("segment", {"root": str(tmp_path / "segs")}),
+                     ("tiered", {"root": str(tmp_path / "tier")})]:
         b = make_backend(spec, **kw)
         raw = encode_chunk(3, rng.bytes(128))
         assert b.get(b.put(raw)) == raw
