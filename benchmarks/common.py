@@ -4,18 +4,37 @@ Scales are reduced vs the paper's 64-node/5M-record cluster runs (this is
 a single CPU container); every benchmark reports ForkBase and its
 competitor on the SAME harness so the paper's *relative* claims are what
 is reproduced (DESIGN.md §3).
+
+Every ``emit()`` also lands in the shared observability registry as a
+``bench_us{name=...}`` gauge, so ``obs.snapshot()`` taken after a bench
+run carries the headline numbers alongside the store/GC telemetry.
 """
 from __future__ import annotations
 
 import time
 from contextlib import contextmanager
 
+from repro import obs
+
 ROWS: list[tuple] = []
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     ROWS.append((name, us_per_call, derived))
+    obs.set_gauge("bench_us", us_per_call, {"name": name})
     print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def stats_dict(*stats_objs, prefix: str = "") -> dict:
+    """Full StoreStats field dump (merged across the given stats objects)
+    with an optional key prefix — replaces the hand-picked field lists
+    the benches used to maintain by hand."""
+    from repro.storage import StoreStats
+
+    merged = StoreStats()
+    for st in stats_objs:
+        merged.merge(st)
+    return {f"{prefix}{k}": v for k, v in merged.as_dict().items()}
 
 
 @contextmanager

@@ -103,11 +103,14 @@ def tier_hit_ratio(root: str, rng, raws) -> dict:
     for i in picks:
         t.get(cids[int(i)])
     s = time.perf_counter() - t0
-    st = t.stats
-    out = {"durable_tier_hit_rate": st.tier_hit_rate,
+    # full field dump via StoreStats.as_dict() — headline keys stay for
+    # run.py's summary, the rest rides along under durable_store_stats
+    st = t.stats.as_dict()
+    out = {"durable_tier_hit_rate": st["tier_hit_rate"],
            "durable_skewed_read_us": s / reads * 1e6,
-           "durable_tier_demotions": st.tier_demotions,
-           "durable_tier_promotions": st.tier_promotions}
+           "durable_tier_demotions": st["tier_demotions"],
+           "durable_tier_promotions": st["tier_promotions"],
+           "durable_store_stats": st}
     t.close()
     emit("durable_skewed_read", out["durable_skewed_read_us"],
          f"hit-rate {out['durable_tier_hit_rate']:.2f}")

@@ -1,0 +1,99 @@
+"""Observability overhead benchmark -> BENCH_obs.json.
+
+Runs the SAME engine put/get workload with the metrics registry
+disabled (every instrument call is a cheap no-op) and fully
+instrumented (spans + histograms + events), and reports the
+enabled/disabled overhead fraction per verb.  CI's obs-overhead job
+fails the build when either fraction exceeds 10%: the tax for always-on
+telemetry must stay in the noise.
+
+Measurement shape matters more than repetition here: disabled and
+enabled batches strictly ALTERNATE on the same engine (order flipping
+every pair), so clock drift, allocator growth, and scheduler jitter
+hit both modes symmetrically, and each mode's estimate is a trimmed
+mean (slowest 20% of batches dropped) so one preempted batch cannot
+fake a regression."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro import obs
+from repro.core import FBlob, ForkBase
+
+from .common import emit
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_obs.json")
+
+VALUE_BYTES = 16 << 10         # ~16KB blobs: a few chunks per commit
+PUT_PAIRS, PUT_INNER = 120, 1  # alternating (dis, en) put batches
+GET_PAIRS, GET_INNER = 120, 20
+
+
+def _paired(fn, pairs: int, inner: int) -> dict[bool, float]:
+    """Trimmed-mean µs/call per mode from strictly alternating batches."""
+    fn()                                             # warm the path
+    samples: dict[bool, list[float]] = {False: [], True: []}
+    for j in range(pairs):
+        order = (False, True) if j % 2 == 0 else (True, False)
+        for enabled in order:
+            (obs.enable if enabled else obs.disable)()
+            t0 = time.perf_counter()
+            for _ in range(inner):
+                fn()
+            samples[enabled].append(time.perf_counter() - t0)
+    obs.enable()
+    out = {}
+    for mode, xs in samples.items():
+        xs = sorted(xs)[:max(1, int(len(xs) * 0.8))]
+        out[mode] = sum(xs) / len(xs) / inner * 1e6
+    return out
+
+
+def run():
+    rng = np.random.default_rng(23)
+    payload = rng.bytes(VALUE_BYTES)
+    obs.reset()
+
+    db = ForkBase()
+    i = [0]
+
+    def put():
+        db.put(f"k{i[0]}", FBlob(payload)); i[0] += 1
+    puts = _paired(put, PUT_PAIRS, PUT_INNER)
+    gets = _paired(lambda: db.get("k0").blob().read(),
+                   GET_PAIRS, GET_INNER)
+
+    # the instrumented batches must actually have produced telemetry
+    snap = obs.snapshot()
+    hists = snap["metrics"]["histograms"]
+    assert snap["enabled"], "registry should be enabled after the run"
+    assert any(k.startswith("store_put_us") for k in hists), hists.keys()
+    assert any(k.startswith("engine_get_us") for k in hists), hists.keys()
+    assert snap["spans"], "instrumented puts should leave root spans"
+
+    out = {
+        "obs_disabled_put_us": puts[False],
+        "obs_enabled_put_us": puts[True],
+        "obs_put_overhead_frac": puts[True] / puts[False] - 1.0,
+        "obs_disabled_get_us": gets[False],
+        "obs_enabled_get_us": gets[True],
+        "obs_get_overhead_frac": gets[True] / gets[False] - 1.0,
+        "obs_value_bytes": VALUE_BYTES,
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(out, f, indent=2)
+
+    emit("obs_put_disabled", puts[False])
+    emit("obs_put_enabled", puts[True],
+         f"overhead {out['obs_put_overhead_frac']:+.1%}")
+    emit("obs_get_disabled", gets[False])
+    emit("obs_get_enabled", gets[True],
+         f"overhead {out['obs_get_overhead_frac']:+.1%}")
+    print(f"# wrote {BENCH_JSON}")
+    # leave the registry in its default (enabled) state for later benches
+    obs.enable()

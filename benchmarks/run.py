@@ -12,7 +12,7 @@ import time
 MODULES = ["micro_ops", "put_breakdown", "durable_bench", "gc_bench",
            "proof_bench", "scalability", "blockchain_ops", "merkle_trees",
            "scan_queries", "wiki_bench", "analytics_bench", "ckpt_dedup",
-           "live_bench"]
+           "live_bench", "obs_bench"]
 
 
 def main() -> None:
@@ -78,6 +78,16 @@ def main() -> None:
                       f"{d['durable_compaction_freed_bytes'] / 1e6:.1f}MB "
                       f"({d['durable_compaction_reclaim_frac']:.0%} of "
                       f"dead) at {d['durable_compaction_mb_s']:.0f}MB/s")
+    if "obs_bench" in only:
+        from .obs_bench import BENCH_JSON as OBS_JSON
+        if os.path.exists(OBS_JSON):
+            o = json.load(open(OBS_JSON))
+            print(f"# obs: put {o['obs_disabled_put_us']:.0f}us -> "
+                  f"{o['obs_enabled_put_us']:.0f}us instrumented "
+                  f"({o['obs_put_overhead_frac']:+.1%}); get "
+                  f"{o['obs_disabled_get_us']:.0f}us -> "
+                  f"{o['obs_enabled_get_us']:.0f}us "
+                  f"({o['obs_get_overhead_frac']:+.1%})")
     if "put_breakdown" in only:
         from .put_breakdown import BENCH_JSON
         if os.path.exists(BENCH_JSON):

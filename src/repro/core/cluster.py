@@ -21,6 +21,7 @@ from . import chunk as ck
 from .chunker import ChunkParams, DEFAULT_PARAMS
 from .chunkstore import ChunkStore
 from .db import ForkBase
+from .. import obs
 from ..storage import BackendBase, resolve_cids
 from ..storage.backend import group_by, put_via
 
@@ -69,6 +70,8 @@ class _RoutingStore(BackendBase):
     batch, the cluster analogue of the §4.6.1 pipeline.  Reads go straight
     to the owning node (dispatcher fast path, §4.6)."""
 
+    OBS_NAME = "routing"
+
     def __init__(self, cluster: "Cluster", home: int):
         super().__init__()
         self.cluster = cluster
@@ -93,7 +96,7 @@ class _RoutingStore(BackendBase):
         node = self.cluster.index.get(cid)
         return self._owner(cid) if node is None else node
 
-    def put_many(self, raws, cids=None) -> list[bytes]:
+    def _put_many_impl(self, raws, cids=None) -> list[bytes]:
         raws = [bytes(r) for r in raws]
         out = resolve_cids(raws, cids)
         st = self.stats
@@ -111,7 +114,7 @@ class _RoutingStore(BackendBase):
         self._notify_put(out)
         return out
 
-    def get_many(self, cids) -> list[bytes]:
+    def _get_many_impl(self, cids) -> list[bytes]:
         st = self.stats
         st.get_batches += 1
         st.gets += len(cids)
@@ -130,7 +133,7 @@ class _RoutingStore(BackendBase):
                 out[i] = p
         return out
 
-    def delete_many(self, cids) -> int:
+    def _delete_many_impl(self, cids) -> int:
         """Sweep fan-out by owning node; the master index and per-node
         placement counters shrink with the deleted chunks."""
         n = 0
@@ -255,8 +258,10 @@ class Cluster:
 
     # public API mirrors ForkBase, routed per key
     def put(self, key, value, branch=None, **kw):
-        svc = self._build_servlet_for(key, value)
-        return svc.put(key, value, branch, **kw)
+        with obs.trace("cluster.put", key=key if isinstance(key, (bytes,
+                       str)) else str(key)):
+            svc = self._build_servlet_for(key, value)
+            return svc.put(key, value, branch, **kw)
 
     def get(self, key, branch=None, **kw):
         return self.servlet_of(key).get(key, branch, **kw)
@@ -351,10 +356,14 @@ class Cluster:
             #   on a durable store this flush feeds the segment compactor
             compacted += nst.compacted_bytes - c0
         self._rebase_build_work()
-        return GCReport(roots=len(roots), live_chunks=len(live),
-                        swept_chunks=swept, reclaimed_bytes=reclaimed,
-                        mark_rounds=rounds, missing_roots=missing,
-                        compacted_bytes=compacted)
+        report = GCReport(roots=len(roots), live_chunks=len(live),
+                          swept_chunks=swept, reclaimed_bytes=reclaimed,
+                          mark_rounds=rounds, missing_roots=missing,
+                          compacted_bytes=compacted)
+        obs.record_gc_report(report)
+        obs.emit("gc.done", mode="stw", scope="cluster",
+                 swept=swept, reclaimed_bytes=reclaimed)
+        return report
 
     def incremental_gc(self, pins=None, extra_roots=(), extra_hooks=()):
         """Begin a cluster-wide incremental collection epoch and return
@@ -473,6 +482,35 @@ class Cluster:
         return owner.servlet
 
     # ---- stats ----
+    def observe(self) -> dict:
+        """Cluster-wide observability snapshot: the global registry /
+        event journal / GC history plus every node store's StoreStats
+        (and their cluster-wide rollup under ``stores.cluster``),
+        per-node placement counters, and the quarantine set.  Pulled at
+        snapshot time — node stats are read, never re-counted into
+        registry counters.  JSON-safe."""
+        from ..storage.backend import StoreStats
+        rollup = StoreStats()
+        stores = {}
+        for i, nd in enumerate(self.nodes):
+            rollup.merge(nd.store.stats)
+            stores[f"node{i}"] = nd.store.stats
+        stores["cluster"] = rollup
+        quarantined = (sorted(self._audit_daemon.quarantined)
+                       if self._audit_daemon is not None else [])
+        extra = {"cluster": {
+            "mode": self.mode,
+            "nodes": [{"chunks": n.stats.chunks,
+                       "chunk_bytes": n.stats.chunk_bytes,
+                       "requests": n.stats.requests,
+                       "build_work": n.stats.build_work}
+                      for n in self.nodes],
+            "index_size": len(self.index),
+            "gc_epoch": self.gc_fence.epoch,
+            "quarantined": quarantined,
+        }}
+        return obs.snapshot(stores=stores, extra=extra)
+
     def storage_distribution(self) -> list[int]:
         return [n.stats.chunk_bytes for n in self.nodes]
 

@@ -18,6 +18,7 @@ from .branch import (DEFAULT_BRANCH, BranchTable, GuardFailed,
                      NoSuchRef)
 from .chunker import ChunkParams, DEFAULT_PARAMS
 from .chunkstore import ChunkStore
+from .. import obs
 from ..storage import StorageBackend, WriteBuffer
 from .fobject import (CHUNKABLE_TYPES, FObject, load_fobject, make_fobject)
 from .postree import POSTree
@@ -106,6 +107,7 @@ class ForkBase:
         self._durable_root = durable_root
         self.store = store if store is not None else ChunkStore()
         self.params = params
+        self._obs_get_tick = 7       # 1-in-8 get timing; first sampled
         # verify-on-get: every Get re-hashes the meta chunk against its
         # uid (per-call ``verify=`` overrides; checks count in StoreStats)
         self.verify_get = verify_get
@@ -171,6 +173,12 @@ class ForkBase:
             base_uid: bytes | None = None, context: bytes = b"",
             guard_uid: bytes | None = None) -> bytes:
         """M3 (branch put), M4 (FoC put on a base version), guarded put."""
+        with obs.trace("engine.put", key=key):
+            return self._put_inner(key, value, branch, base_uid=base_uid,
+                                   context=context, guard_uid=guard_uid)
+
+    def _put_inner(self, key, value, branch, *, base_uid, context,
+                   guard_uid) -> bytes:
         key = _k(key)
         if base_uid is not None:              # M4: fork-on-conflict path
             bases: tuple[bytes, ...] = (base_uid,)
@@ -203,7 +211,23 @@ class ForkBase:
             verify: bool | None = None) -> ValueHandle | None:
         """M1 (branch get) / M2 (version get).  ``verify`` (default: the
         engine's ``verify_get``) re-hashes the meta chunk against the uid
-        and raises TamperedChunk on mismatch."""
+        and raises TamperedChunk on mismatch.
+
+        Reads are histogram-only (``engine_get_us``), timed at a 1-in-8
+        sample: a span (or even an unconditional timer) per get would
+        tax the O(10µs) hot path the obs-overhead gate protects, so
+        only the write verbs carry full span trees."""
+        if not obs.REGISTRY.enabled:
+            return self._get_inner(key, branch, uid=uid, verify=verify)
+        self._obs_get_tick = tick = (self._obs_get_tick + 1) & 7
+        if tick:
+            return self._get_inner(key, branch, uid=uid, verify=verify)
+        t0 = obs.monotonic()
+        out = self._get_inner(key, branch, uid=uid, verify=verify)
+        obs.REGISTRY.histogram("engine_get_us").observe(obs.monotonic() - t0)
+        return out
+
+    def _get_inner(self, key, branch, *, uid, verify):
         key = _k(key)
         if uid is None:
             uid = self.branches.head(key, branch or DEFAULT_BRANCH)
@@ -332,6 +356,27 @@ class ForkBase:
             write_durably(_heads_path(self._durable_root),
                           self.branches.snapshot())
 
+    # ---------------------------------------------------- observability
+    def observe(self) -> dict:
+        """Engine observability snapshot: the global registry / event
+        journal / GC history plus this engine's StoreStats (pulled at
+        snapshot time, never re-counted) and live-table aggregates.
+        JSON-safe — ``json.dumps(db.observe())`` round-trips."""
+        live = {"tables": len(self._live), "dirty_keys": 0, "folds": 0,
+                "fold_seconds": 0.0}
+        for t in self._live.values():
+            live["dirty_keys"] += t.dirty_count
+            live["folds"] += t.stats.folds
+            live["fold_seconds"] += t.stats.fold_seconds
+        extra = {"engine": {
+            "keys": len(self.branches.keys()),
+            "pins": len(self.pins.uids()),
+            "gc_epoch": self.gc_fence.epoch,
+            "live": live,
+        }}
+        return obs.snapshot(stores={"store": self.store.stats},
+                            extra=extra)
+
     # ---------------------------------------------------- space reclaim
     def gc(self, *, extra_roots: Iterable[bytes] = (),
            incremental: bool = False, budget: int = 256):
@@ -369,9 +414,14 @@ class ForkBase:
         # epoch regardless of how the collection is driven
         self.gc_fence.begin_epoch()
         roots = set(extra_roots) | self.gc_fence.grace_roots()
-        return GarbageCollector(self.store, branches=self.branches,
-                                pins=self.pins, extra_roots=roots,
-                                ref_hooks=self.gc_hooks).collect()
+        report = GarbageCollector(self.store, branches=self.branches,
+                                  pins=self.pins, extra_roots=roots,
+                                  ref_hooks=self.gc_hooks).collect()
+        obs.record_gc_report(report)
+        obs.emit("gc.done", mode="stw", scope="engine",
+                 swept=report.swept_chunks,
+                 reclaimed_bytes=report.reclaimed_bytes)
+        return report
 
     def incremental_gc(self, *, extra_roots: Iterable[bytes] = ()):
         """Begin an incremental collection epoch and return its

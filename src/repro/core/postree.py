@@ -162,10 +162,12 @@ class POSTree:
     def from_root(cls, store, kind: int, root_cid: bytes,
                   params: ChunkParams = DEFAULT_PARAMS) -> "POSTree":
         """Materialize the index (not the leaves) from a stored root."""
-        raw = ck.chunk_payload(store.get(root_cid))
-        rtype = ck.chunk_type(store.get(root_cid))
+        root_raw = store.get(root_cid)
+        raw = ck.chunk_payload(root_raw)
+        rtype = ck.chunk_type(root_raw)
         if rtype in (ck.UINDEX, ck.SINDEX):
-            # walk down, collecting each level's entries
+            # walk down, collecting each level's entries; each level is
+            # fetched with ONE batched get_many, not a get per node
             levels_desc = []
             entries = (ck.decode_sindex if rtype == ck.SINDEX
                        else ck.decode_uindex)(raw)
@@ -178,8 +180,8 @@ class POSTree:
                     break
                 dec = ck.decode_sindex if ctype == ck.SINDEX else ck.decode_uindex
                 nxt = []
-                for e in cur:
-                    nxt.extend(dec(ck.chunk_payload(store.get(e.cid))))
+                for raw_c in store.get_many([e.cid for e in cur]):
+                    nxt.extend(dec(ck.chunk_payload(raw_c)))
                 cur = nxt
             root_count = sum(e.count for e in levels_desc[0])
             root_key = levels_desc[0][-1].key
@@ -232,22 +234,38 @@ class POSTree:
     def _leaf_payload(self, i: int) -> bytes:
         return ck.chunk_payload(self._get_raw(self.levels[0][i].cid))
 
+    def _parse_leaf(self, payload: bytes):
+        if self.kind == ck.BLOB:
+            return np.frombuffer(payload, dtype=np.uint8)
+        if self.kind == ck.MAP:
+            return ck.unpack_kv_stream(payload)
+        return ck.unpack_lv_stream(payload)
+
     def leaf_elements(self, i: int) -> list:
         """Parsed elements of leaf i (bytes-array for Blob, kv tuples for
         Map, bytes for List/Set)."""
         if i in self._leaf_cache:
             return self._leaf_cache[i]
-        payload = self._leaf_payload(i)
-        if self.kind == ck.BLOB:
-            els = np.frombuffer(payload, dtype=np.uint8)
-        elif self.kind == ck.MAP:
-            els = ck.unpack_kv_stream(payload)
-        else:
-            els = ck.unpack_lv_stream(payload)
+        els = self._parse_leaf(self._leaf_payload(i))
         if len(self._leaf_cache) > 256:
             self._leaf_cache.clear()
         self._leaf_cache[i] = els
         return els
+
+    def prefetch_leaves(self, j0: int, j1: int) -> None:
+        """Pull leaves [j0, j1) into the parse cache with ONE batched
+        ``get_many`` over the uncached cids — the read-side analogue of
+        the WriteBuffer's batched flush.  Range reads and scans that
+        touch k leaves cost one store round-trip instead of k."""
+        need = [j for j in range(j0, j1) if j not in self._leaf_cache]
+        if len(need) < 2:
+            return                       # 0/1 leaves: plain path is fine
+        src = self._buf if self._buf is not None else self.store
+        raws = src.get_many([self.levels[0][j].cid for j in need])
+        if len(self._leaf_cache) + len(need) > 256:
+            self._leaf_cache.clear()
+        for j, raw in zip(need, raws):
+            self._leaf_cache[j] = self._parse_leaf(ck.chunk_payload(raw))
 
     def leaf_of_item(self, pos: int) -> tuple[int, int]:
         """(leaf index, local offset) of global item position pos."""
@@ -269,6 +287,7 @@ class POSTree:
         if end <= start:
             return b""
         j0, off0 = self.leaf_of_item(start)
+        self.prefetch_leaves(j0, self.leaf_of_item(end - 1)[0] + 1)
         out = []
         pos = start
         j = j0
@@ -302,8 +321,12 @@ class POSTree:
         return found, j, li, base + li
 
     def iter_elements(self):
-        for i in range(len(self.levels[0])):
-            yield from self.leaf_elements(i)
+        n = len(self.levels[0])
+        for blk in range(0, n, 128):
+            hi = min(blk + 128, n)
+            self.prefetch_leaves(blk, hi)
+            for i in range(blk, hi):
+                yield from self.leaf_elements(i)
 
     # ------------------------------------------------------ lookup via tree
     def descend_key(self, key: bytes):

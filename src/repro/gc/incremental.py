@@ -64,6 +64,7 @@ from __future__ import annotations
 from collections import deque
 from enum import Enum
 
+from .. import obs
 from .collector import GCReport, chunk_refs, expand_refs, filter_roots
 from .pins import PinSet
 
@@ -138,6 +139,7 @@ class EpochFence:
                     for s in _bloom_slots(u):
                         bloom[s >> 3] |= 1 << (s & 7)
                     self._spilled[e] = self._spilled.get(e, 0) + 1
+            obs.inc("gc_fence_pins_total", len(uids))
         return e
 
     def pin_count(self, epoch: int | None = None) -> int:
@@ -150,6 +152,8 @@ class EpochFence:
         """A collection is starting: advance the epoch and expire pins
         that fell out of the grace window."""
         self.epoch += 1
+        obs.inc("gc_epochs_total")
+        obs.set_gauge("gc_epoch", self.epoch)
         for e in [e for e in self._pins if e < self.epoch - self.grace]:
             del self._pins[e]
         for e in [e for e in self._blooms if e < self.epoch - self.grace]:
@@ -276,6 +280,8 @@ class IncrementalCollector:
         for s in self._barrier_stores:
             s.add_put_listener(self._put_barrier)
         self.phase = GCPhase.MARK
+        obs.emit("gc.begin", epoch=self.epoch, roots=len(roots),
+                 missing_roots=missing)
         return self.epoch
 
     # ---------------------------------------------------------- barrier
@@ -349,7 +355,23 @@ class IncrementalCollector:
     def step(self, budget: int = 256) -> GCPhase:
         """Advance the collection by at most ``budget`` chunks (marked
         OR swept OR inventory-frozen — one bounded pause) and return
-        the phase."""
+        the phase.  Each active slice's wall-clock pause is recorded in
+        the observability registry (``gc_slice_us`` histogram plus the
+        bounded per-slice pause history ``obs.snapshot()['gc']``), and
+        phase transitions land in the event journal."""
+        if not obs.REGISTRY.enabled or not self.active:
+            return self._step_inner(budget)
+        before = self.phase
+        t0 = obs.monotonic()
+        phase = self._step_inner(budget)
+        obs.record_gc_pause(str(before), obs.monotonic() - t0,
+                            epoch=self.epoch)
+        if phase is not before:
+            obs.emit("gc.phase", epoch=self.epoch,
+                     phase_from=str(before), phase_to=str(phase))
+        return phase
+
+    def _step_inner(self, budget: int = 256) -> GCPhase:
         if budget < 1:
             raise ValueError(f"budget must be >= 1, got {budget}")
         if not self.active:
@@ -477,5 +499,11 @@ class IncrementalCollector:
         self._condemned_set = set()
         self._shaded = set()         # O(live) memory is the epoch's, not ours
         self.phase = GCPhase.DONE
+        obs.record_gc_report(self.report)
+        obs.emit("gc.done", mode="incremental", epoch=self.epoch,
+                 slices=self.report.slices,
+                 swept=self.report.swept_chunks,
+                 reclaimed_bytes=self.report.reclaimed_bytes,
+                 barriered=self.report.barriered)
         if self._on_done is not None:
             self._on_done(self.report)

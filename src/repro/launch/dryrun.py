@@ -7,7 +7,6 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 import argparse      # noqa: E402
 import json          # noqa: E402
 import re            # noqa: E402
-import time          # noqa: E402
 import traceback     # noqa: E402
 from functools import partial  # noqa: E402
 from pathlib import Path       # noqa: E402
@@ -16,6 +15,7 @@ import jax           # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from ..configs import ARCHS, SHAPES, input_specs, shapes_for  # noqa: E402
+from ..obs import monotonic                                   # noqa: E402
 from ..roofline import analyze_hlo                            # noqa: E402
 from ..models import model as model_mod                       # noqa: E402
 from ..shardings import Sharding                              # noqa: E402
@@ -135,7 +135,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     mesh = make_production_mesh(multi_pod=multi_pod)
     shd = Sharding(mesh, cfg, shape.global_batch)
     ispecs = input_specs(cfg, shape)
-    t0 = time.time()
+    t0 = monotonic()
 
     if shape.kind == "train":
         state_shapes, sspecs = eval_state_specs(cfg, shd)
@@ -177,11 +177,11 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                           donate_argnums=(1,))
             with mesh:
                 lowered = jfn.lower(params_shapes, cache_shapes, ispecs)
-    t_lower = time.time() - t0
+    t_lower = monotonic() - t0
 
-    t0 = time.time()
+    t0 = monotonic()
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = monotonic() - t0
 
     mem = compiled.memory_analysis()
     print(mem)                                # proves it fits

@@ -6,13 +6,13 @@
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..configs import ARCHS, smoke as smoke_cfg
+from ..obs import monotonic
 from ..models import model as M
 from ..shardings import Sharding
 
@@ -41,23 +41,23 @@ def main():
         batch["patch_embeds"] = jnp.zeros((B, cfg.n_patches, cfg.d_model),
                                           jnp.bfloat16)
 
-    t0 = time.time()
+    t0 = monotonic()
     if cfg.family in ("hybrid", "ssm", "dense", "moe", "audio", "vlm"):
         cache, logits = jax.jit(
             lambda p, b: M.prefill(p, b, cfg, shd, cache_len=T))(params,
                                                                  batch)
-    t_prefill = time.time() - t0
+    t_prefill = monotonic() - t0
     decode = jax.jit(lambda p, c, b: M.decode_step(p, c, b, cfg, shd))
     tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
     out = [tok]
     pos0 = S + (cfg.n_patches if cfg.frontend == "vision" else 0)
-    t0 = time.time()
+    t0 = monotonic()
     for i in range(args.gen - 1):
         pos = jnp.full((B,), pos0 + i, jnp.int32)
         cache, logits = decode(params, cache, {"tokens": tok, "pos": pos})
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         out.append(tok)
-    dt = time.time() - t0
+    dt = monotonic() - t0
     gen = np.concatenate([np.asarray(t) for t in out], axis=1)
     assert (gen < cfg.vocab).all() and np.isfinite(
         np.asarray(logits, np.float32)).all()

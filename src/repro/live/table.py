@@ -34,6 +34,7 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass, field
 
+from .. import obs
 from ..core.branch import DEFAULT_BRANCH
 from ..core.types import FMap
 
@@ -295,6 +296,12 @@ class LiveTable:
         rep.folded_keys = n
         rep.deleted_keys = deleted
         rep.seconds = dt
+        # route the self-timed fold into the shared observability layer:
+        # one journal event per epoch fold plus the fold-latency histogram
+        obs.emit("live.fold", key=self.key, branch=self.branch,
+                 folded_keys=n, deleted_keys=deleted, uid=uid,
+                 seconds=round(dt, 6))
+        obs.observe("live_fold_us", dt)
         return rep
 
 

@@ -26,6 +26,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from .. import obs
 from ..core.fobject import CHUNKABLE_TYPES, FObject
 from ..core.hashing import content_hash_many
 from ..core.postree import POSTree
@@ -352,6 +353,7 @@ class AuditDaemon:
     # ---------------------------------------------------------- internals
     def _audit_target(self, target: str) -> AuditReport:
         self.audits += 1
+        obs.inc("audit_audits_total")
         if target == self.PLACEMENT:
             return self.auditor.audit_placement(self.cluster)
         ni = int(target[4:])
@@ -366,6 +368,10 @@ class AuditDaemon:
         """Append to the findings log, keeping only the newest
         MAX_FINDINGS — an unrepaired node would grow it forever."""
         self.findings.extend(findings)
+        for f in findings:
+            obs.inc("audit_findings_total")
+            obs.emit("audit.finding", node=f.node, finding_kind=f.kind,
+                     detail=f.detail, cid=f.cid)
         if len(self.findings) > self.MAX_FINDINGS:
             del self.findings[:len(self.findings) - self.MAX_FINDINGS]
 
@@ -377,6 +383,7 @@ class AuditDaemon:
         if budget < 1:
             raise ValueError(f"budget must be >= 1, got {budget}")
         self.ticks += 1
+        obs.inc("audit_ticks_total")
         rep = AuditReport()
         due = sorted((t for t, d in self._due.items() if d <= self.ticks),
                      key=lambda t: (self._due[t], t))
@@ -396,7 +403,18 @@ class AuditDaemon:
                 if not r2.ok:
                     self._record(r2.findings)
                     bad = self._quarantine_of(r2)
+                    fresh = bad - self.quarantined
                     self.quarantined |= bad
+                    for node in sorted(fresh):
+                        reason = ",".join(sorted(
+                            {f.kind for f in r2.findings
+                             if f.node == node})) or "repeatable-finding"
+                        obs.inc("audit_quarantines_total")
+                        obs.emit("audit.quarantine", node=node,
+                                 reason=reason, target=target,
+                                 tick=self.ticks)
+                    obs.set_gauge("audit_quarantined_nodes",
+                                  len(self.quarantined))
                     # a quarantined node drops to base-rate auditing so
                     # repair is observed — even when the finding came
                     # from another target (e.g. the placement check)
@@ -412,7 +430,12 @@ class AuditDaemon:
     def release(self, node: str) -> None:
         """Operator verb: lift a quarantine after repair; the node
         re-enters the rotation at the base audit rate."""
+        if node in self.quarantined:
+            obs.inc("audit_releases_total")
+            obs.emit("audit.release", node=node, reason="operator-release",
+                     tick=self.ticks)
         self.quarantined.discard(node)
+        obs.set_gauge("audit_quarantined_nodes", len(self.quarantined))
         if node in self._interval:
             self._interval[node] = self.base_interval
             self._due[node] = self.ticks + 1

@@ -39,6 +39,7 @@ import bisect
 import struct
 from dataclasses import dataclass
 
+from .. import obs
 from ..core.hashing import current_hash
 from .attest import (Attestation, HeadProof, UB_TAG, EMPTY_ROOT,
                      encode_entry, entry_leaves, head_entries, leaf_hash,
@@ -132,8 +133,11 @@ class DeltaAttestor:
                secret: bytes | None = None) -> Attestation:
         """Bit-identical to ``attest_heads(self.branches, ...)``, at
         O(k log n) hash work for k head changes since the last call."""
-        att = Attestation(self.root(), len(self._entries), bytes(context))
-        return sign(att, secret) if secret is not None else att
+        with obs.trace("proof.attest", heads=len(self._entries)):
+            obs.inc("attests_total")
+            att = Attestation(self.root(), len(self._entries),
+                              bytes(context))
+            return sign(att, secret) if secret is not None else att
 
     def prove(self, entry: bytes) -> HeadProof:
         """Audit path for one committed entry straight off the resident
@@ -179,6 +183,7 @@ class DeltaAttestor:
 
     def _apply_dirty(self) -> None:
         self.stats.delta_refreshes += 1
+        obs.inc("attest_delta_refreshes_total")
         updates: list[tuple[bytes, bytes]] = []
         inserts: list[bytes] = []
         removes: list[bytes] = []
@@ -238,6 +243,7 @@ class DeltaAttestor:
         """Full rebuild (first use / hash-algorithm change): one batched
         leaf-hash dispatch over every entry, levels built bottom-up."""
         self.stats.full_rebuilds += 1
+        obs.inc("attest_full_rebuilds_total")
         entries = head_entries(self.branches)
         self._entries = entries
         self.stats.leaf_hashes += len(entries)

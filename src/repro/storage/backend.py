@@ -16,8 +16,12 @@ batches of one.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, fields
+from time import perf_counter as _perf
 from typing import Iterator, Protocol, Sequence, runtime_checkable
+
+from ..obs import REGISTRY as _OBS
+from ..obs import trace as _trace
 
 
 class ChunkMissing(KeyError):
@@ -73,6 +77,23 @@ class StoreStats:
     @property
     def tier_hit_rate(self) -> float:
         return self.tier_hits / max(1, self.tier_hits + self.tier_misses)
+
+    def as_dict(self) -> dict:
+        """Every counter plus the derived ratios — the one exhaustive
+        export surface, so a newly added field reaches every consumer
+        (benches, snapshots) without another hand-picked list."""
+        out = {f.name: getattr(self, f.name) for f in fields(self)}
+        out["dedup_ratio"] = self.dedup_ratio
+        out["tier_hit_rate"] = self.tier_hit_rate
+        return out
+
+    def merge(self, other: "StoreStats") -> "StoreStats":
+        """Accumulate another stats block into this one (cluster-wide
+        rollups).  Returns self for chaining."""
+        for f in fields(self):
+            setattr(self, f.name, getattr(self, f.name) + getattr(other,
+                                                                  f.name))
+        return self
 
 
 @runtime_checkable
@@ -228,11 +249,29 @@ def put_via(stats: StoreStats, child, raws: Sequence[bytes],
 
 class BackendBase:
     """Common plumbing: stats + singular ops as batches of one, plus the
-    put-notification hook every backend fires for the GC write barrier."""
+    put-notification hook every backend fires for the GC write barrier.
+
+    The batched verbs are *instrumented dispatchers*: ``put_many`` /
+    ``get_many`` / ``delete_many`` check the global observability flag
+    and delegate to the subclass ``_put_many_impl`` / ``_get_many_impl``
+    / ``_delete_many_impl``.  When enabled, writes and deletes open a
+    ``store.put`` / ``store.delete`` span (nesting under whatever layer
+    called them — engine, routing, tiered — via the trace contextvar)
+    and reads record into a per-backend latency histogram; when
+    disabled the whole cost is one flag check.  ``WriteBuffer``
+    deliberately overrides the batched verbs directly: its per-chunk
+    accumulation during tree build is too hot to instrument, and its
+    flush lands on an instrumented inner ``put_many`` anyway."""
+
+    #: Label used for span attrs and histogram labels; subclasses set it
+    #: (falls back to the class name).
+    OBS_NAME = ""
 
     def __init__(self) -> None:
         self.stats = StoreStats()
         self._put_listeners: list = []
+        self._obs_hists: dict = {}
+        self._obs_tick = 7           # 1-in-8 read sampling; first sampled
 
     # ---- GC write barrier (incremental collection) ----
     def add_put_listener(self, fn) -> None:
@@ -252,6 +291,53 @@ class BackendBase:
         for fn in list(self._put_listeners):
             fn(cids)
 
+    # ---- observability plumbing ----
+    def _obs_label(self) -> str:
+        return self.OBS_NAME or type(self).__name__
+
+    def _obs_hist(self, verb: str):
+        h = self._obs_hists.get(verb)
+        if h is None:
+            h = _OBS.histogram(f"store_{verb}_us",
+                               {"backend": self._obs_label()})
+            self._obs_hists[verb] = h
+        return h
+
+    # ---- instrumented batched dispatchers ----
+    def put_many(self, raws: Sequence[bytes],
+                 cids: Sequence[bytes | None] | None = None) -> list[bytes]:
+        if not _OBS.enabled:
+            return self._put_many_impl(raws, cids)
+        with _trace("store.put", _hist=self._obs_hist("put"),
+                    backend=self._obs_label(), chunks=len(raws)) as sp:
+            out = self._put_many_impl(raws, cids)
+            sp.set(bytes=sum(map(len, raws)))
+        return out
+
+    def get_many(self, cids: Sequence[bytes]) -> list[bytes]:
+        # reads are histogram-only (no span), single-cid batches skip the
+        # timer entirely (index walks issue one tiny get per tree level),
+        # and multi-cid batches are timed at a 1-in-8 sample: a uniform
+        # sample keeps the latency distribution honest while the per-call
+        # tax the obs-overhead gate guards stays at one counter bump.
+        # StoreStats still counts every get inside the impl.
+        if not _OBS.enabled or len(cids) < 2:
+            return self._get_many_impl(cids)
+        self._obs_tick = tick = (self._obs_tick + 1) & 7
+        if tick:
+            return self._get_many_impl(cids)
+        t0 = _perf()
+        out = self._get_many_impl(cids)
+        self._obs_hist("get").observe(_perf() - t0)
+        return out
+
+    def delete_many(self, cids: Sequence[bytes]) -> int:
+        if not _OBS.enabled:
+            return self._delete_many_impl(cids)
+        with _trace("store.delete", _hist=self._obs_hist("delete"),
+                    backend=self._obs_label(), chunks=len(cids)):
+            return self._delete_many_impl(cids)
+
     def put(self, raw: bytes, cid: bytes | None = None) -> bytes:
         return self.put_many([raw], [cid])[0]
 
@@ -267,5 +353,6 @@ class BackendBase:
     def flush(self) -> None:
         pass
 
-    # subclasses implement put_many / get_many / has_many / delete_many /
-    # iter_cids / __len__
+    # subclasses implement _put_many_impl / _get_many_impl / has_many /
+    # _delete_many_impl / iter_cids / __len__ (WriteBuffer overrides the
+    # batched verbs themselves — see class docstring)

@@ -17,6 +17,8 @@ class LRUCacheBackend(BackendBase):
     no integrity check at all, because verified leaf stores only see the
     misses (the tamper-evidence conformance suite covers this)."""
 
+    OBS_NAME = "lru"
+
     def __init__(self, inner, capacity_bytes: int = 64 << 20,
                  verify: bool = False):
         super().__init__()
@@ -37,7 +39,7 @@ class LRUCacheBackend(BackendBase):
             self._cache_bytes -= len(old)
 
     # ------------------------------------------------------------ batched
-    def put_many(self, raws, cids=None) -> list[bytes]:
+    def _put_many_impl(self, raws, cids=None) -> list[bytes]:
         raws = [bytes(r) for r in raws]
         st = self.stats
         st.put_batches += 1
@@ -49,7 +51,7 @@ class LRUCacheBackend(BackendBase):
         self._notify_put(out)
         return out
 
-    def get_many(self, cids) -> list[bytes]:
+    def _get_many_impl(self, cids) -> list[bytes]:
         st = self.stats
         st.get_batches += 1
         st.gets += len(cids)
@@ -71,7 +73,7 @@ class LRUCacheBackend(BackendBase):
     def has_many(self, cids) -> list[bool]:
         return overlay_has_many(self._cache, cids, self.inner.has_many)
 
-    def delete_many(self, cids) -> int:
+    def _delete_many_impl(self, cids) -> int:
         # invalidate cache entries first so a concurrent read can't serve
         # a deleted chunk from the overlay
         for cid in cids:

@@ -40,6 +40,7 @@ from __future__ import annotations
 import os
 import struct
 
+from ...obs import emit as obs_emit
 from ..backend import (BackendBase, ChunkMissing, TamperedChunk,
                        resolve_cids)
 from .fsutil import fsync_dir, replace_durably
@@ -103,6 +104,7 @@ def _pack_footer(gen: int, records) -> bytes:
 
 
 class SegmentBackend(BackendBase):
+    OBS_NAME = "segment"
     """Durable log-structured StorageBackend over a directory of bounded
     segment files.  Conforms to the full protocol (batched verbs, put
     listeners, streamed ``iter_cids``) so it slots under the cache /
@@ -259,6 +261,8 @@ class SegmentBackend(BackendBase):
                 good = f.tell()
         if good < size:
             os.truncate(path, good)
+            obs_emit("storage.torn_tail", backend="segment", path=path,
+                     dropped_bytes=size - good, offset=good)
         return entries
 
     # ------------------------------------------------------------- append
@@ -284,7 +288,7 @@ class SegmentBackend(BackendBase):
         self._roll(seg.gen + 1)
         fsync_dir(self.root)                 # the new file's dir entry
 
-    def put_many(self, raws, cids=None) -> list[bytes]:
+    def _put_many_impl(self, raws, cids=None) -> list[bytes]:
         raws = [bytes(r) for r in raws]
         provided = ([] if cids is None else
                     [i for i, c in enumerate(cids) if c is not None])
@@ -326,7 +330,7 @@ class SegmentBackend(BackendBase):
                                            os.O_RDONLY)
         return fd
 
-    def get_many(self, cids) -> list[bytes]:
+    def _get_many_impl(self, cids) -> list[bytes]:
         st = self.stats
         st.get_batches += 1
         if self._wf is not None:
@@ -353,7 +357,7 @@ class SegmentBackend(BackendBase):
         return [cid in self._index for cid in cids]
 
     # ------------------------------------------------------------ delete
-    def delete_many(self, cids) -> int:
+    def _delete_many_impl(self, cids) -> int:
         st = self.stats
         n = 0
         for cid in cids:
@@ -432,6 +436,8 @@ class SegmentBackend(BackendBase):
             self._drop_segment(gen)
             self.stats.compactions += 1
             self.stats.compacted_bytes += before
+            obs_emit("segment.compaction", gen=gen, bytes_before=before,
+                     bytes_after=0, dropped=True)
             return before, 0
         tmp = seg.path + ".compact"
         records: list[tuple[int, int, bytes]] = []
@@ -464,6 +470,8 @@ class SegmentBackend(BackendBase):
         seg.size = off + len(footer) + _TRAILER.size
         self.stats.compactions += 1
         self.stats.compacted_bytes += before - seg.size
+        obs_emit("segment.compaction", gen=gen, bytes_before=before,
+                 bytes_after=seg.size, dropped=False)
         return before, seg.size
 
     def compact_step(self):

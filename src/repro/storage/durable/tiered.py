@@ -27,6 +27,7 @@ from __future__ import annotations
 
 from collections import OrderedDict
 
+from ...obs import emit as obs_emit
 from ..backend import (BackendBase, StorageBackend, TamperedChunk,
                        delete_via, overlay_get_many, overlay_has_many,
                        resolve_cids)
@@ -51,6 +52,8 @@ _REPLAYED_FIELDS = ("puts", "dedup_hits", "deletes", "logical_bytes",
 class TieredBackend(BackendBase):
     """LRU memory hot tier + durable cold tier, GC-liveness aware."""
 
+    OBS_NAME = "tiered"
+
     def __init__(self, cold: StorageBackend, *, hot_bytes: int = 64 << 20,
                  verify: bool = False):
         super().__init__()
@@ -64,7 +67,7 @@ class TieredBackend(BackendBase):
             setattr(self.stats, field, getattr(cold.stats, field))
 
     # ------------------------------------------------------------- write
-    def put_many(self, raws, cids=None) -> list[bytes]:
+    def _put_many_impl(self, raws, cids=None) -> list[bytes]:
         raws = [bytes(r) for r in raws]
         provided = ([] if cids is None else
                     [i for i, c in enumerate(cids) if c is not None])
@@ -122,6 +125,8 @@ class TieredBackend(BackendBase):
             # direct child call, not put_via: these bytes are already in
             # this store's physical_bytes — demotion moves, not adds
             self.cold.put_many(demote_raws, demote_cids)
+            obs_emit("tier.demote", chunks=len(demote_cids),
+                     bytes=sum(map(len, demote_raws)), cause="overflow")
 
     def demote(self, target_bytes: int = 0) -> int:
         """Age-out policy hook: write back + evict LRU chunks until the
@@ -142,10 +147,11 @@ class TieredBackend(BackendBase):
         return before - len(self._hot)
 
     # -------------------------------------------------------------- read
-    def get_many(self, cids) -> list[bytes]:
+    def _get_many_impl(self, cids) -> list[bytes]:
         st = self.stats
         st.get_batches += 1
         st.gets += len(cids)
+        promoted0 = st.tier_promotions
         verify = self.verify
         cid_of = _chunk_cid_of() if verify else None
 
@@ -170,13 +176,15 @@ class TieredBackend(BackendBase):
         out = overlay_get_many(self._hot, cids, fetch,
                                on_hit=on_hit, on_fetch=promote)
         self._evict()
+        if st.tier_promotions > promoted0:
+            obs_emit("tier.promote", chunks=st.tier_promotions - promoted0)
         return out
 
     def has_many(self, cids) -> list[bool]:
         return overlay_has_many(self._hot, cids, self.cold.has_many)
 
     # ------------------------------------------------------------ delete
-    def delete_many(self, cids) -> int:
+    def _delete_many_impl(self, cids) -> int:
         st = self.stats
         n = 0
         cold_cids: list[bytes] = []
@@ -216,6 +224,8 @@ class TieredBackend(BackendBase):
             self.stats.tier_demotions += len(cids)
             self.cold.put_many(raws, cids)
             self._dirty.clear()
+            obs_emit("tier.demote", chunks=len(cids),
+                     bytes=sum(map(len, raws)), cause="flush")
         n0 = self.cold.stats.compactions
         b0 = self.cold.stats.compacted_bytes
         self.cold.flush()

@@ -13,6 +13,7 @@ from __future__ import annotations
 import os
 import struct
 
+from ..obs import emit as obs_emit
 from .backend import (BackendBase, ChunkMissing, TamperedChunk,
                       resolve_cids)
 from .durable.fsutil import replace_durably
@@ -41,6 +42,8 @@ class MemoryBackend(BackendBase):
     tombstones applied; with ``verify=True`` every replayed chunk is
     re-hashed and tampering raises TamperedChunk)."""
 
+    OBS_NAME = "memory"
+
     def __init__(self, log_path: str | None = None, verify: bool = False):
         super().__init__()
         self._data: dict[bytes, bytes] = {}
@@ -55,7 +58,7 @@ class MemoryBackend(BackendBase):
             self._log = open(log_path, "ab")
 
     # ------------------------------------------------------------ batched
-    def put_many(self, raws, cids=None) -> list[bytes]:
+    def _put_many_impl(self, raws, cids=None) -> list[bytes]:
         raws = [bytes(r) for r in raws]
         provided = ([] if cids is None else
                     [i for i, c in enumerate(cids) if c is not None])
@@ -84,7 +87,7 @@ class MemoryBackend(BackendBase):
         self._notify_put(out)
         return out
 
-    def get_many(self, cids) -> list[bytes]:
+    def _get_many_impl(self, cids) -> list[bytes]:
         st = self.stats
         st.get_batches += 1
         cid_of = _chunk_cid_of() if self.verify else None
@@ -105,7 +108,7 @@ class MemoryBackend(BackendBase):
     def has_many(self, cids) -> list[bool]:
         return [cid in self._data for cid in cids]
 
-    def delete_many(self, cids) -> int:
+    def _delete_many_impl(self, cids) -> int:
         st = self.stats
         n = 0
         for cid in cids:
@@ -173,12 +176,15 @@ class MemoryBackend(BackendBase):
                     st.physical_bytes += ln
                 self._data[cid] = raw
                 good = f.tell()
-        if good < os.path.getsize(path):
+        size = os.path.getsize(path)
+        if good < size:
             # drop the torn tail ON DISK too: appending after unparseable
             # bytes would corrupt every later record (replay would read
             # them as the torn record's payload — tombstones and new
             # chunks silently lost)
             os.truncate(path, good)
+            obs_emit("storage.torn_tail", backend="memory", path=path,
+                     dropped_bytes=size - good, offset=good)
 
     def log_size(self) -> int:
         """Current on-disk log size in bytes (0 without a log)."""

@@ -8,6 +8,8 @@ from .backend import (BackendBase, ChunkMissing, delete_via, group_by,
 
 
 class ReplicatedBackend(BackendBase):
+    OBS_NAME = "replicated"
+
     def __init__(self, stores: list, k: int = 2):
         super().__init__()
         assert stores
@@ -21,7 +23,7 @@ class ReplicatedBackend(BackendBase):
         return [(h + i) % n for i in range(self.k)]
 
     # ------------------------------------------------------------ batched
-    def put_many(self, raws, cids=None) -> list[bytes]:
+    def _put_many_impl(self, raws, cids=None) -> list[bytes]:
         raws = [bytes(r) for r in raws]
         out = resolve_cids(raws, cids)
         st = self.stats
@@ -44,7 +46,7 @@ class ReplicatedBackend(BackendBase):
         self._notify_put(out)
         return out
 
-    def get_many(self, cids) -> list[bytes]:
+    def _get_many_impl(self, cids) -> list[bytes]:
         """Batched read: group cids by primary replica, one get_many per
         store; only lost replicas fail over per-cid around the ring."""
         st = self.stats
@@ -79,7 +81,7 @@ class ReplicatedBackend(BackendBase):
                                   for ri in self._ring(cid)[1:])
         return out
 
-    def delete_many(self, cids) -> int:
+    def _delete_many_impl(self, cids) -> int:
         """All-replica delete: a swept chunk leaves every copy in the ring
         (deletes counted once per distinct chunk, like dedup on Put)."""
         st = self.stats

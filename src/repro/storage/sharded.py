@@ -10,6 +10,8 @@ from .memory import MemoryBackend
 
 
 class ShardedBackend(BackendBase):
+    OBS_NAME = "sharded"
+
     def __init__(self, shards=4, factory=MemoryBackend):
         super().__init__()
         if isinstance(shards, int):
@@ -21,7 +23,7 @@ class ShardedBackend(BackendBase):
         return int.from_bytes(cid[:8], "little") % len(self.shards)
 
     # ------------------------------------------------------------ batched
-    def put_many(self, raws, cids=None) -> list[bytes]:
+    def _put_many_impl(self, raws, cids=None) -> list[bytes]:
         raws = [bytes(r) for r in raws]
         out = resolve_cids(raws, cids)
         st = self.stats
@@ -34,7 +36,7 @@ class ShardedBackend(BackendBase):
         self._notify_put(out)
         return out
 
-    def get_many(self, cids) -> list[bytes]:
+    def _get_many_impl(self, cids) -> list[bytes]:
         st = self.stats
         st.get_batches += 1
         st.gets += len(cids)
@@ -48,7 +50,7 @@ class ShardedBackend(BackendBase):
     def has_many(self, cids) -> list[bool]:
         return [self.shards[self._owner(cid)].has(cid) for cid in cids]
 
-    def delete_many(self, cids) -> int:
+    def _delete_many_impl(self, cids) -> int:
         """Sweep fan-out: one delete_many per owning shard."""
         n = 0
         for si, (_, cs, _) in group_by(lambda i, c: self._owner(c),
