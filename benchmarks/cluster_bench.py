@@ -1,0 +1,187 @@
+"""Cluster runtime benchmark -> BENCH_cluster.json.
+
+Two claims from the event-driven runtime (core.runtime), measured:
+
+1. **Coalesced dispatch beats per-request fan-out.**  The same put
+   workload runs once as N individual ``Cluster.put`` calls (each its
+   own WriteBuffer flush and per-node ``put_many`` fan-out) and once
+   queued through ``ClusterRuntime`` and drained in coalesced
+   ``put_batch`` groups (one flush covers a whole batch).  Reported:
+   µs/op for both modes, the speedup, and the routing-store
+   ``put_batches`` counts that explain it.
+
+2. **The MaintenanceDaemon stays out of the foreground's way.**  Put
+   latency is sampled with no daemon and with the daemon ticking in a
+   background thread (re-replication + incremental-GC cycles + audits +
+   staggered folds/compactions drawing one budget, backing off under
+   load).  Reported: p50/p99 for both runs and the p99 ratio — the CI
+   expectation is ratio <= 1.25.
+
+Alternating rounds (mode order flipped each round, fresh clusters per
+round) keep clock drift and allocator growth symmetric, as in
+obs_bench.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.core import Cluster, FBlob, MaintenanceDaemon, RuntimeConfig
+
+from .common import emit
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_cluster.json")
+
+N_NODES = 4
+VALUE_BYTES = 1 << 10
+COALESCE_ROUNDS = 4        # alternating (per-request, coalesced) rounds
+COALESCE_OPS = 96          # puts per round per mode
+LATENCY_OPS = 4000         # put samples across both daemon modes
+LATENCY_SEGMENTS = 40      # alternating (off, on) sampling segments
+
+
+def _routing_put_batches(cl) -> int:
+    return sum(n.servlet.store.stats.put_batches for n in cl.nodes)
+
+
+def _per_request(rng) -> tuple[float, int]:
+    cl = Cluster(N_NODES)
+    vals = [rng.bytes(VALUE_BYTES) for _ in range(COALESCE_OPS)]
+    t0 = time.perf_counter()
+    for i, v in enumerate(vals):
+        cl.put(f"k{i}", FBlob(v))
+    dt = time.perf_counter() - t0
+    return dt / COALESCE_OPS * 1e6, _routing_put_batches(cl)
+
+
+def _coalesced(rng) -> tuple[float, int]:
+    cl = Cluster(N_NODES)
+    rt = cl.runtime(RuntimeConfig(queue_depth=4 * COALESCE_OPS))
+    vals = [rng.bytes(VALUE_BYTES) for _ in range(COALESCE_OPS)]
+    t0 = time.perf_counter()
+    futs = [rt.submit_put(f"k{i}", FBlob(v)) for i, v in enumerate(vals)]
+    rt.drain()
+    for f in futs:
+        f.result()
+    dt = time.perf_counter() - t0
+    return dt / COALESCE_OPS * 1e6, _routing_put_batches(cl)
+
+
+def _put_latencies(rng) -> tuple[list[float], list[float]]:
+    """Put-latency samples (µs) without and with the daemon, taken as
+    strictly alternating segments on ONE cluster so scheduler and
+    allocator jitter land on both modes symmetrically."""
+    cl = Cluster(N_NODES)
+    # give the daemon real work: garbage to collect every GC cycle
+    for i in range(24):
+        cl.put(f"g{i}", FBlob(rng.bytes(VALUE_BYTES)))
+        cl.fork(f"g{i}", "master", "tmp")
+        cl.put(f"g{i}", FBlob(rng.bytes(VALUE_BYTES)), "tmp")
+        cl.remove(f"g{i}", "tmp")
+    # production-shaped cadence: GC epochs advance continuously in
+    # SHORT slices (tick_budget bounds each foreground pause), with
+    # audit rounds / folds / compactions staggered well apart — the
+    # p99 claim is about pause size, which the budget controls, not
+    # about the daemon being idle
+    d = MaintenanceDaemon(cl, config=RuntimeConfig(
+        tick_interval_s=0.01, tick_budget=4, gc_cycle_ticks=16,
+        fold_every=16, audit_every=64, compact_every=32))
+    base: list[list[float]] = []
+    with_d: list[list[float]] = []
+    seg = LATENCY_OPS // LATENCY_SEGMENTS
+    i = [0]
+
+    def sample(sink: list[list[float]]) -> None:
+        cur: list[float] = []
+        for _ in range(seg):
+            v = rng.bytes(VALUE_BYTES)
+            t0 = time.perf_counter()
+            cl.put(f"k{i[0] % 64}", FBlob(v))
+            cur.append((time.perf_counter() - t0) * 1e6)
+            i[0] += 1
+        sink.append(cur)
+
+    # a CPU-bound sampling loop against a 5ms GIL switch interval would
+    # charge the daemon up to 5ms of scheduler stall per collision —
+    # measure lock/slice pauses, not GIL quantum artifacts
+    switch0 = sys.getswitchinterval()
+    sys.setswitchinterval(0.0005)
+    try:
+        for j in range(LATENCY_SEGMENTS):
+            if j % 2 == 0:
+                sample(base)
+            else:
+                d.start()
+                sample(with_d)
+                d.stop()
+    finally:
+        sys.setswitchinterval(switch0)
+        d.stop()
+    return _trim_pool(base), _trim_pool(with_d)
+
+
+def _trim_pool(segments: list[list[float]]) -> list[float]:
+    """Pool per-segment samples, dropping the slowest 10% of segments
+    (by mean) per mode: a scheduler preemption burst lands on one whole
+    segment and would otherwise own the pooled p99 for that mode alone
+    — the same trimmed estimator obs_bench uses, at segment grain."""
+    keep = sorted(segments, key=lambda s: sum(s) / len(s))
+    keep = keep[:max(1, int(len(keep) * 0.9))]
+    return [x for s in keep for x in s]
+
+
+def _pct(xs: list[float], q: float) -> float:
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(q * len(xs)))]
+
+
+def run():
+    rng = np.random.default_rng(29)
+
+    per_us, co_us = [], []
+    per_batches = co_batches = 0
+    for r in range(COALESCE_ROUNDS):
+        modes = ((_per_request, per_us), (_coalesced, co_us))
+        for fn, sink in (modes if r % 2 == 0 else modes[::-1]):
+            us, batches = fn(rng)
+            sink.append(us)
+            if fn is _per_request:
+                per_batches = batches
+            else:
+                co_batches = batches
+    per_op = sum(sorted(per_us)[:-1]) / (len(per_us) - 1)
+    co_op = sum(sorted(co_us)[:-1]) / (len(co_us) - 1)
+
+    base, with_d = _put_latencies(rng)
+    ratio = _pct(with_d, 0.99) / _pct(base, 0.99)
+
+    out = {
+        "n_nodes": N_NODES,
+        "coalesce_ops": COALESCE_OPS,
+        "per_request_put_us": per_op,
+        "coalesced_put_us": co_op,
+        "coalesce_speedup": per_op / co_op,
+        "per_request_put_batches": per_batches,
+        "coalesced_put_batches": co_batches,
+        "daemon_off_put_p50_us": _pct(base, 0.50),
+        "daemon_off_put_p99_us": _pct(base, 0.99),
+        "daemon_on_put_p50_us": _pct(with_d, 0.50),
+        "daemon_on_put_p99_us": _pct(with_d, 0.99),
+        "daemon_p99_ratio": ratio,
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(out, f, indent=2)
+
+    emit("cluster_put_per_request", per_op,
+         f"{per_batches} routing put batches")
+    emit("cluster_put_coalesced", co_op,
+         f"x{out['coalesce_speedup']:.2f} in {co_batches} batches")
+    emit("cluster_put_p99_no_daemon", out["daemon_off_put_p99_us"])
+    emit("cluster_put_p99_with_daemon", out["daemon_on_put_p99_us"],
+         f"ratio {ratio:.2f}")
+    print(f"# wrote {BENCH_JSON}")

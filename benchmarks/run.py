@@ -12,7 +12,7 @@ import time
 MODULES = ["micro_ops", "put_breakdown", "durable_bench", "gc_bench",
            "proof_bench", "scalability", "blockchain_ops", "merkle_trees",
            "scan_queries", "wiki_bench", "analytics_bench", "ckpt_dedup",
-           "live_bench", "obs_bench"]
+           "live_bench", "obs_bench", "cluster_bench"]
 
 
 def main() -> None:
@@ -88,6 +88,18 @@ def main() -> None:
                   f"{o['obs_disabled_get_us']:.0f}us -> "
                   f"{o['obs_enabled_get_us']:.0f}us "
                   f"({o['obs_get_overhead_frac']:+.1%})")
+    if "cluster_bench" in only:
+        from .cluster_bench import BENCH_JSON as CL_JSON
+        if os.path.exists(CL_JSON):
+            c = json.load(open(CL_JSON))
+            print(f"# cluster: put {c['per_request_put_us']:.0f}us -> "
+                  f"{c['coalesced_put_us']:.0f}us coalesced "
+                  f"(x{c['coalesce_speedup']:.2f}, "
+                  f"{c['per_request_put_batches']} -> "
+                  f"{c['coalesced_put_batches']} routing batches); "
+                  f"daemon p99 {c['daemon_off_put_p99_us']:.0f}us -> "
+                  f"{c['daemon_on_put_p99_us']:.0f}us "
+                  f"(x{c['daemon_p99_ratio']:.2f})")
     if "put_breakdown" in only:
         from .put_breakdown import BENCH_JSON
         if os.path.exists(BENCH_JSON):

@@ -13,8 +13,10 @@ Public surface:
 from .branch import (DEFAULT_BRANCH, BranchExists, GuardFailed, NoSuchRef)
 from .chunker import ChunkParams, DEFAULT_PARAMS
 from .chunkstore import ChunkStore, ReplicatedStore
-from .cluster import Cluster
+from .cluster import Cluster, RoutingIndexMiss
 from .db import ForkBase, TypeNotMatch, ValueHandle
+from .runtime import (Backpressure, ClusterRuntime, MaintenanceDaemon,
+                      RuntimeConfig)
 from .fobject import FObject, load_fobject, make_fobject
 from .merge import (BUILTIN_RESOLVERS, Conflict, MergeConflict,
                     aggregate_resolver, append_resolver, choose_one, lca)
@@ -32,4 +34,6 @@ __all__ = [
     "choose_one", "append_resolver", "aggregate_resolver", "lca",
     "load_fobject", "make_fobject", "StorageBackend", "ChunkMissing",
     "TamperedChunk", "WriteBuffer", "make_backend",
+    "Backpressure", "ClusterRuntime", "MaintenanceDaemon",
+    "RuntimeConfig", "RoutingIndexMiss",
 ]

@@ -237,6 +237,109 @@ class ForkBase:
         return ValueHandle(self, load_fobject(self.store, uid,
                                               verify=verify))
 
+    # -------------------------------------------------- batched verbs
+    def put_batch(self, requests) -> list[bytes]:
+        """Coalesced multi-request put (the async runtime's dispatch
+        unit): ``requests`` are ``(key, value)``, ``(key, value,
+        branch)`` or ``(key, value, branch, kwargs)`` tuples.  Plain
+        branch puts commit through ONE shared WriteBuffer — every
+        value's tree chunks and meta chunk across the whole batch hit
+        the store as a single put_many (the §4.6.1 chunk pipeline
+        lifted to the request layer) — and same-key-same-branch
+        requests chain within the batch exactly as sequential puts
+        would (the buffer's overlay serves the base version's meta
+        chunk before flush).  Head updates publish only after the
+        flush, so a reader never sees a head whose chunks are still
+        buffered.  Guarded / fork-on-conflict requests (``guard_uid``,
+        ``base_uid``) need the real branch table: the batch flushes
+        around them and they take the single-put path, order
+        preserved.  Returns uids in request order."""
+        out: list[bytes] = []
+        with obs.trace("engine.put_batch", requests=len(requests)):
+            batch: WriteBuffer | None = None
+            heads: dict[tuple[bytes, str], bytes] = {}
+            pending: list[tuple[bytes, str, bytes, tuple]] = []
+
+            def _flush() -> None:
+                nonlocal batch
+                if batch is None:
+                    return
+                batch.flush()
+                for key, branch, uid, bases in pending:
+                    self.branches.on_new_version(key, uid, bases)
+                    self.branches.set_head(key, branch, uid)
+                pending.clear()
+                heads.clear()
+                batch = None
+
+            for req in requests:
+                key, value = req[0], req[1]
+                branch = (req[2] if len(req) > 2 and req[2] is not None
+                          else DEFAULT_BRANCH)
+                kw = dict(req[3]) if len(req) > 3 and req[3] else {}
+                if (kw.get("base_uid") is not None
+                        or kw.get("guard_uid") is not None):
+                    _flush()
+                    out.append(self._put_inner(
+                        key, value, branch,
+                        base_uid=kw.get("base_uid"),
+                        context=kw.get("context", b""),
+                        guard_uid=kw.get("guard_uid")))
+                    continue
+                key = _k(key)
+                if batch is None:
+                    batch = WriteBuffer(self.store)
+                head = heads.get((key, branch))
+                if head is None:
+                    head = self.branches.head(key, branch)
+                bases = (head,) if head else ()
+                base_depth = (load_fobject(batch, head).depth
+                              if head else -1)
+                t, data = self._commit_value(value, batch)
+                obj = make_fobject(batch, t, key, data, bases,
+                                   kw.get("context", b""), base_depth)
+                heads[(key, branch)] = obj.uid
+                pending.append((key, branch, obj.uid, bases))
+                out.append(obj.uid)
+            _flush()
+        return out
+
+    def get_batch(self, requests) -> list:
+        """Coalesced multi-request get: ``requests`` are ``(key,)``,
+        ``(key, branch)`` or ``(key, branch, kwargs)`` tuples.  Heads
+        resolve first, then every requested meta chunk loads in ONE
+        ``store.get_many`` (one routing fan-out per storage node
+        instead of one per request).  Requests needing verify-on-get
+        take the single-get path.  Returns ValueHandle-or-None in
+        request order."""
+        parsed = []
+        for req in requests:
+            key = req[0]
+            branch = req[1] if len(req) > 1 else None
+            kw = req[2] if len(req) > 2 and req[2] else {}
+            parsed.append((key, branch, kw))
+        out: list = [None] * len(parsed)
+        fetch: list[tuple[int, bytes]] = []
+        for i, (key, branch, kw) in enumerate(parsed):
+            verify = kw.get("verify")
+            verify = self.verify_get if verify is None else verify
+            if verify:                     # verify re-hashes per chunk
+                out[i] = self._get_inner(key, branch,
+                                         uid=kw.get("uid"), verify=True)
+                continue
+            uid = kw.get("uid")
+            if uid is None:
+                uid = self.branches.head(_k(key),
+                                         branch or DEFAULT_BRANCH)
+                if uid is None:
+                    continue
+            fetch.append((i, bytes(uid)))
+        if fetch:
+            raws = self.store.get_many([uid for _, uid in fetch])
+            for (i, uid), raw in zip(fetch, raws):
+                out[i] = ValueHandle(self, FObject.deserialize(raw, uid))
+        return out
+
     # ------------------------------------------------- live fast path
     def _on_head_mutation(self, key: bytes) -> None:
         """Branch-table listener: feeds the attest pin delta and marks

@@ -61,6 +61,7 @@ attested epoch is stamped into the context, see proof.delta).
 """
 from __future__ import annotations
 
+import threading
 from collections import deque
 from enum import Enum
 
@@ -115,6 +116,10 @@ class EpochFence:
         self.grace = grace             # epochs a pin outlives its issue
         self.max_pins = max_pins       # exact uids kept per epoch
         self.heads_fn = None           # current-head enumerator (spill path)
+        # attests pin from mutator threads while the maintenance daemon
+        # begins epochs — the fence lock is a leaf (never held across
+        # heads_fn, which may take servlet locks)
+        self._lock = threading.Lock()
         self._pins: dict[int, set[bytes]] = {}
         self._blooms: dict[int, bytearray] = {}
         self._spilled: dict[int, int] = {}
@@ -123,22 +128,25 @@ class EpochFence:
     def pin(self, uids) -> int:
         """Record the heads an attestation just committed to; returns
         the epoch number stamped into the attestation."""
-        e = self.epoch
+        with self._lock:
+            e = self.epoch
+            if uids:
+                cur = self._pins.setdefault(e, set())
+                for u in uids:
+                    u = bytes(u)
+                    if u in cur:
+                        continue
+                    if self.max_pins is None or len(cur) < self.max_pins:
+                        cur.add(u)
+                    else:                   # spill: bounded-memory path
+                        bloom = self._blooms.get(e)
+                        if bloom is None:
+                            bloom = self._blooms[e] = bytearray(
+                                _BLOOM_BITS // 8)
+                        for s in _bloom_slots(u):
+                            bloom[s >> 3] |= 1 << (s & 7)
+                        self._spilled[e] = self._spilled.get(e, 0) + 1
         if uids:
-            cur = self._pins.setdefault(e, set())
-            for u in uids:
-                u = bytes(u)
-                if u in cur:
-                    continue
-                if self.max_pins is None or len(cur) < self.max_pins:
-                    cur.add(u)
-                else:                       # spill: bounded-memory path
-                    bloom = self._blooms.get(e)
-                    if bloom is None:
-                        bloom = self._blooms[e] = bytearray(_BLOOM_BITS // 8)
-                    for s in _bloom_slots(u):
-                        bloom[s >> 3] |= 1 << (s & 7)
-                    self._spilled[e] = self._spilled.get(e, 0) + 1
             obs.inc("gc_fence_pins_total", len(uids))
         return e
 
@@ -151,27 +159,31 @@ class EpochFence:
     def begin_epoch(self) -> int:
         """A collection is starting: advance the epoch and expire pins
         that fell out of the grace window."""
-        self.epoch += 1
+        with self._lock:
+            self.epoch += 1
+            epoch = self.epoch
+            for e in [e for e in self._pins if e < epoch - self.grace]:
+                del self._pins[e]
+            for e in [e for e in self._blooms if e < epoch - self.grace]:
+                del self._blooms[e]
+                self._spilled.pop(e, None)
         obs.inc("gc_epochs_total")
-        obs.set_gauge("gc_epoch", self.epoch)
-        for e in [e for e in self._pins if e < self.epoch - self.grace]:
-            del self._pins[e]
-        for e in [e for e in self._blooms if e < self.epoch - self.grace]:
-            del self._blooms[e]
-            self._spilled.pop(e, None)
-        return self.epoch
+        obs.set_gauge("gc_epoch", epoch)
+        return epoch
 
     def grace_roots(self) -> set[bytes]:
         """Heads the starting collection must treat as roots: every pin
         still inside the grace window.  Spilled pins are recovered by
         filtering the current heads through the epoch blooms."""
-        out: set[bytes] = set()
-        for uids in self._pins.values():
-            out |= uids
-        if self._blooms:
+        with self._lock:     # snapshot only — heads_fn runs unlocked
+            out: set[bytes] = set()
+            for uids in self._pins.values():
+                out |= uids
+            blooms = [bytes(b) for b in self._blooms.values()]
+        if blooms:
             heads = (set(self.heads_fn()) if self.heads_fn is not None
                      else set())
-            for bloom in self._blooms.values():
+            for bloom in blooms:
                 out.update(bytes(h) for h in heads
                            if _bloom_has(bloom, bytes(h)))
         return out
@@ -219,6 +231,12 @@ class IncrementalCollector:
                           else self.store.flush)
         self._on_done = on_done
         self.fence = fence
+        # true-thread safety for the barrier/gray-queue state: mutator
+        # threads fire _put_barrier/root_barrier while the maintenance
+        # daemon drives step() — one RLock serializes them.  Lock order:
+        # servlet lock ≺ collector lock ≺ cluster index/node-store locks
+        # (begin() therefore gathers roots BEFORE taking this lock).
+        self._lock = threading.RLock()
         self.phase = GCPhase.IDLE
         self.epoch = 0
         self.report: GCReport | None = None
@@ -251,6 +269,9 @@ class IncrementalCollector:
             raise RuntimeError(
                 f"collection already in flight (epoch {self.epoch}, "
                 f"phase {self.phase})")
+        # root gathering runs UNLOCKED: all_heads/grace_roots may take
+        # servlet locks, which mutators hold while waiting on the
+        # collector lock in _put_barrier — holding it here would deadlock
         roots = set(self.extra_roots) | set(bytes(u) for u in extra_roots)
         if self.branches is not None:
             roots |= self.branches.all_heads()      # branch-table copy
@@ -264,22 +285,31 @@ class IncrementalCollector:
         else:
             self.epoch += 1
         frontier, missing = filter_roots(self.store, roots)
-        # floating-garbage bound: chunks this epoch sweeps that the
-        # PREVIOUS epoch marked live were orphaned mid-collection and
-        # survived exactly one extra epoch — the snapshot-at-the-
-        # beginning trade, now measured (GCReport.floating_garbage)
-        self._floating_from = (self.fence.last_live
-                               if self.fence is not None else frozenset())
-        self.report = GCReport(roots=len(roots), missing_roots=missing,
-                               epoch=self.epoch)
-        self._shaded = set(frontier)
-        self._gray = deque(frontier)
-        self._inv_iter = None
-        self._condemned = deque()
-        self._condemned_set = set()
-        for s in self._barrier_stores:
-            s.add_put_listener(self._put_barrier)
-        self.phase = GCPhase.MARK
+        with self._lock:
+            if self.active:
+                raise RuntimeError(
+                    f"collection already in flight (epoch {self.epoch}, "
+                    f"phase {self.phase})")
+            # floating-garbage bound: chunks this epoch sweeps that the
+            # PREVIOUS epoch marked live were orphaned mid-collection and
+            # survived exactly one extra epoch — the snapshot-at-the-
+            # beginning trade, now measured (GCReport.floating_garbage)
+            self._floating_from = (self.fence.last_live
+                                   if self.fence is not None
+                                   else frozenset())
+            self.report = GCReport(roots=len(roots), missing_roots=missing,
+                                   epoch=self.epoch)
+            self._shaded = set(frontier)
+            self._gray = deque(frontier)
+            self._inv_iter = None
+            self._condemned = deque()
+            self._condemned_set = set()
+            for s in self._barrier_stores:
+                s.add_put_listener(self._put_barrier)
+                # park the collector lock on the store: one put batch
+                # (write + barrier) becomes atomic against step() slices
+                s._barrier_lock = self._lock
+            self.phase = GCPhase.MARK
         obs.emit("gc.begin", epoch=self.epoch, roots=len(roots),
                  missing_roots=missing)
         return self.epoch
@@ -289,22 +319,23 @@ class IncrementalCollector:
         """Store-level write barrier: fires on every put batch (ForkBase
         put/merge/truncate_history, WriteBuffer flush) of every store
         this collection watches."""
-        if self.phase is GCPhase.MARK:
-            for c in cids:
-                if c not in self._shaded:
-                    self._shaded.add(c)
-                    self._gray.append(c)
-                    self.report.barriered += 1
-                # the sliced inventory freeze may already have condemned
-                # this cid (it was white when its slice was snapshotted):
-                # shading it must also pull it back out
-                if self._condemned_set:
-                    self._condemned_set.discard(c)
-        elif self.phase is GCPhase.SWEEP:
-            for c in cids:
-                if c in self._condemned_set:
-                    self._condemned_set.discard(c)
-                    self.report.barriered += 1
+        with self._lock:
+            if self.phase is GCPhase.MARK:
+                for c in cids:
+                    if c not in self._shaded:
+                        self._shaded.add(c)
+                        self._gray.append(c)
+                        self.report.barriered += 1
+                    # the sliced inventory freeze may already have
+                    # condemned this cid (it was white when its slice was
+                    # snapshotted): shading it must also pull it back out
+                    if self._condemned_set:
+                        self._condemned_set.discard(c)
+            elif self.phase is GCPhase.SWEEP:
+                for c in cids:
+                    if c in self._condemned_set:
+                        self._condemned_set.discard(c)
+                        self.report.barriered += 1
 
     def root_barrier(self, uid: bytes) -> None:
         """Re-rooting barrier: a mutator just made ``uid`` a root (fork
@@ -315,9 +346,13 @@ class IncrementalCollector:
         if not self.active:
             return
         uid = bytes(uid)
-        if self.phase is GCPhase.MARK:
-            self._put_barrier([uid] if self.store.has(uid) else [])
-            return
+        with self._lock:   # phase must not flip between check and rescue
+            if self.phase is not GCPhase.SWEEP:
+                self._put_barrier([uid] if self.store.has(uid) else [])
+                return
+            self._root_rescue(uid)
+
+    def _root_rescue(self, uid: bytes) -> None:
         if uid not in self._condemned_set:
             return                   # black, already rescued, or swept
         frontier = [uid]
@@ -374,6 +409,10 @@ class IncrementalCollector:
     def _step_inner(self, budget: int = 256) -> GCPhase:
         if budget < 1:
             raise ValueError(f"budget must be >= 1, got {budget}")
+        with self._lock:
+            return self._step_locked(budget)
+
+    def _step_locked(self, budget: int) -> GCPhase:
         if not self.active:
             return self.phase
         self.report.slices += 1
@@ -483,6 +522,7 @@ class IncrementalCollector:
     def _finish(self) -> None:
         for s in self._barrier_stores:
             s.remove_put_listener(self._put_barrier)
+            s._barrier_lock = None
         if self.report.swept_chunks:
             c0 = self._compacted_total()
             self._flush_fn()         # durable tombstones, like collect();

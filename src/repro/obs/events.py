@@ -15,7 +15,7 @@ from collections import Counter as _TallyCounter
 from collections import deque
 
 from .metrics import REGISTRY
-from .trace import _jsonable
+from .trace import _jsonable, monotonic
 
 __all__ = ["EventLog", "EVENTS", "emit"]
 
@@ -44,7 +44,11 @@ class EventLog:
     def emit(self, kind: str, **attrs) -> None:
         if not self._reg.enabled:
             return
-        ev = {"kind": kind, "ts": round(time.time(), 6)}
+        # ``ts`` (wall clock) is for the JSONL sink and humans; ``mono_us``
+        # shares the span clock (trace.monotonic), so events and span
+        # timelines correlate — snapshot() exports the same clock's "now"
+        ev = {"kind": kind, "ts": round(time.time(), 6),
+              "mono_us": round(monotonic() * 1e6, 3)}
         for k, v in attrs.items():
             ev[k] = _jsonable(v)
         self._ring.append(ev)

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 from .events import EVENTS
 from .metrics import REGISTRY, Counter, Gauge
-from .trace import recent_spans
+from .trace import monotonic, recent_spans
 
 __all__ = ["snapshot", "prometheus_text"]
 
@@ -24,6 +24,10 @@ def snapshot(stores=None, extra=None, *, events_limit: int = 256) -> dict:
     """
     out = {
         "enabled": REGISTRY.enabled,
+        # monotonic reference point (same clock as event ``mono_us`` and
+        # span ``start_us``): consumers compute event/span ages against
+        # this instead of wall time, immune to clock steps
+        "now_us": round(monotonic() * 1e6, 3),
         "metrics": REGISTRY.as_dict(),
         "events": EVENTS.events(limit=events_limit),
         "event_counts": EVENTS.counts(),

@@ -78,6 +78,9 @@ class Span:
             "name": self.name,
             "span_id": self.span_id,
             "parent_id": self.parent_id,
+            # same clock as event ``mono_us``, so exported span trees and
+            # the event journal line up on one timeline
+            "start_us": round(self.start_s * 1e6, 3),
             "us": round(self.duration_s * 1e6, 3),
             "attrs": {k: _jsonable(v) for k, v in self.attrs.items()},
             "children": [c.as_dict() for c in self.children],

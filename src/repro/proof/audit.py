@@ -246,7 +246,13 @@ class Auditor:
         entry must be held by the owning node and hash back to its cid
         (one batched hash over everything held)."""
         rep = AuditReport()
-        placed = self._sample(cluster.index.items())
+        lock = getattr(cluster, "_index_lock", None)
+        if lock is not None:     # snapshot under the routing index lock
+            with lock:
+                entries = list(cluster.index.items())
+        else:
+            entries = cluster.index.items()
+        placed = self._sample(entries)
         rep.chunks_checked += len(placed)
         held: list[tuple[int, bytes, bytes]] = []
         for cid, ni in placed:
@@ -284,7 +290,9 @@ class Auditor:
         # key's home servlet
         owner_of: dict[bytes, list[int]] = {}
         for ni, nd in enumerate(cluster.nodes):
-            for key in nd.servlet.branches.keys():
+            with nd.lock:
+                keys = nd.servlet.branches.keys()
+            for key in keys:
                 owner_of.setdefault(key, []).append(ni)
         for key, nis in owner_of.items():
             home = cluster._home_index(key)
@@ -296,8 +304,9 @@ class Auditor:
                         f"node{home}"))
         # 3) per-servlet engine audits through the stateless verifiers
         for ni, nd in enumerate(cluster.nodes):
-            rep.merge(self.audit_engine(nd.servlet, node=f"node{ni}",
-                                        secret=secret))
+            with nd.lock:
+                rep.merge(self.audit_engine(nd.servlet, node=f"node{ni}",
+                                            secret=secret))
         return rep
 
 
@@ -357,9 +366,17 @@ class AuditDaemon:
         if target == self.PLACEMENT:
             return self.auditor.audit_placement(self.cluster)
         ni = int(target[4:])
-        return self.auditor.audit_engine(self.cluster.nodes[ni].servlet,
-                                         node=target,
-                                         secret=self.secret)
+        nd = self.cluster.nodes[ni]
+        # engine audits attest and walk the branch table — hold the
+        # servlet lock so a daemon-thread audit can't race a foreground
+        # put on the same servlet
+        lock = getattr(nd, "lock", None)
+        if lock is None:
+            return self.auditor.audit_engine(nd.servlet, node=target,
+                                             secret=self.secret)
+        with lock:
+            return self.auditor.audit_engine(nd.servlet, node=target,
+                                             secret=self.secret)
 
     def _quarantine_of(self, report: AuditReport) -> set[str]:
         return {f.node for f in report.findings}
@@ -413,6 +430,11 @@ class AuditDaemon:
                         obs.emit("audit.quarantine", node=node,
                                  reason=reason, target=target,
                                  tick=self.ticks)
+                        # ENFORCE at the routing layer: a direct call
+                        # (not an event tap), so placement stops using
+                        # the node and re-replication queues even with
+                        # observability disabled
+                        self._enforce(node, "quarantine", reason)
                     obs.set_gauge("audit_quarantined_nodes",
                                   len(self.quarantined))
                     # a quarantined node drops to base-rate auditing so
@@ -427,6 +449,23 @@ class AuditDaemon:
             self._due[target] = self.ticks + self._interval[target]
         return rep
 
+    def _enforce(self, node: str, verb: str, reason: str = "") -> None:
+        """Forward a quarantine/release decision to the cluster's
+        routing-layer enforcement verbs.  Only ``nodeN`` names map to
+        cluster nodes (replica/servlet findings from standalone audits
+        have no placement to enforce against)."""
+        if not (node.startswith("node") and node[4:].isdigit()):
+            return
+        ni = int(node[4:])
+        if verb == "quarantine":
+            fn = getattr(self.cluster, "quarantine_node", None)
+            if fn is not None:
+                fn(ni, reason=reason)
+        else:
+            fn = getattr(self.cluster, "release_node", None)
+            if fn is not None:
+                fn(ni)
+
     def release(self, node: str) -> None:
         """Operator verb: lift a quarantine after repair; the node
         re-enters the rotation at the base audit rate."""
@@ -434,6 +473,7 @@ class AuditDaemon:
             obs.inc("audit_releases_total")
             obs.emit("audit.release", node=node, reason="operator-release",
                      tick=self.ticks)
+            self._enforce(node, "release")
         self.quarantined.discard(node)
         obs.set_gauge("audit_quarantined_nodes", len(self.quarantined))
         if node in self._interval:

@@ -174,9 +174,25 @@ def test_reput_after_delete(backend, rng):
 def test_iter_cids_is_sweep_inventory(backend, rng):
     raws = chunks(rng, n=9)
     cids = backend.put_many(raws)
-    assert set(backend.iter_cids()) == set(cids)
+    assert _inventory(backend) == set(cids)
     backend.delete_many(cids[:4])
-    assert set(backend.iter_cids()) == set(cids[4:])
+    assert _inventory(backend) == set(cids[4:])
+
+
+def _inventory(backend):
+    """Cluster-wide sweep inventory.  A routing store's ``iter_cids``
+    is scoped to its OWN servlet's share (lazy, per-node) — the full
+    inventory is the union across servlets, and the shares must be
+    disjoint (each chunk swept exactly once in a cluster-wide walk)."""
+    cl = getattr(backend, "cluster", None)
+    if cl is None:
+        return set(backend.iter_cids())
+    shares = [set(n.servlet.store.iter_cids()) for n in cl.nodes]
+    union: set = set()
+    for s in shares:
+        assert not (union & s), "servlet inventories must be disjoint"
+        union |= s
+    return union
 
 
 def _physical_bytes(backend):
