@@ -35,7 +35,7 @@ def run():
                "rocksdb": KVLedger("bucket", 1024),
                "forkbase_kv": ForkBaseKV(1024)}
     # seed state
-    for name, sys_ in systems.items():
+    for _name, sys_ in systems.items():
         for i in range(512):
             sys_.write("kv", f"key{i}", rng.bytes(64))
         sys_.commit()
@@ -71,7 +71,7 @@ def run_live() -> dict:
     out: dict = {}
     ledgers = {"arch": ForkBaseLedger(),
                "live": ForkBaseLedger(live=True)}
-    for name, led in ledgers.items():
+    for _name, led in ledgers.items():
         for i in range(n_seed):
             led.write("kv", f"key{i}", rng.bytes(64))
         led.commit()

@@ -105,7 +105,7 @@ def run() -> None:
     # ---- tree path: the same ops through per-op POS-Tree commits ----
     n_tput = 12
     t0 = time.perf_counter()
-    for i in range(n_tput):
+    for _ in range(n_tput):
         m = db.get(KEY).map()
         m.set(_key(int(rng.integers(0, n))), rng.bytes(16))
         db.put(KEY, m)

@@ -140,7 +140,7 @@ def _attest_churn(rng, n_heads: int = 1000, k_updates: int = 10,
         delta_s = delta_calls = 0.0
         full_s = full_calls = 0.0
         version = 0
-        for r in range(rounds):
+        for _ in range(rounds):
             picks = [keys[int(p)] for p in
                      rng.integers(0, n_heads, k_updates)]
             for key in picks:                 # k single-head updates

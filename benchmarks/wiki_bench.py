@@ -28,7 +28,7 @@ def run():
             w.create(f"page{p}", t)
             r.create(f"page{p}", t)
         t0 = time.perf_counter()
-        for e in range(edits):
+        for _ in range(edits):
             for p in range(n_pages):
                 cur = texts[p]
                 pos = int(rng.integers(0, len(cur) - 256))
@@ -46,7 +46,7 @@ def run():
         emit(f"wiki_edit_{tag}_forkbase", us,
              f"throughput~{1e6 / us:.0f}ops/s")
         t0 = time.perf_counter()
-        for e in range(edits):
+        for _ in range(edits):
             for p in range(n_pages):
                 r.edit(f"page{p}", texts[p])
         us_r = (time.perf_counter() - t0) / (edits * n_pages) * 1e6
@@ -62,7 +62,7 @@ def run():
     t = rng.bytes(page_size)
     w.create("p", t)
     r.create("p", t)
-    for e in range(16):
+    for _ in range(16):
         pos = int(rng.integers(0, len(t) - 100))
         t = t[:pos] + rng.bytes(64) + t[pos:]
         w.edit("p", lambda b, q=pos, s=t[pos:pos + 64]: b.insert(q, s))

@@ -168,7 +168,7 @@ class KVLedger:
         kk = f"{contract}/{key}"
         cur = self.kv.get(kk.encode())
         hist = [cur]
-        for h, old in reversed(index.get(kk, [])):
+        for _h, old in reversed(index.get(kk, [])):
             hist.append(old.encode("latin1"))
         return hist[:-1]
 

@@ -25,6 +25,7 @@ import numpy as np
 
 from ..core import ForkBase, FBlob, FMap, POSTree, load_fobject
 from ..core import chunk as ck
+from ..errors import CheckpointMissing, TensorMissing
 from ..storage import WriteBuffer
 
 
@@ -136,16 +137,18 @@ class CheckpointStore:
         mesh+specs the tensors are device_put with the target sharding —
         the restart mesh need not match the writer's (elastic)."""
         handle = self.db.get(self.key, branch, uid=uid)
-        assert handle is not None, "no checkpoint found"
+        if handle is None:
+            raise CheckpointMissing(f"{self.key!r}@{branch or uid!r}")
         manifest = handle.map()
         leaves, treedef = _leaf_paths(like)
         spec_leaves = None
         if specs is not None:
             spec_leaves, _ = _leaf_paths(specs)
         out = []
-        for i, (name, leaf) in enumerate(leaves):
+        for i, (name, _leaf) in enumerate(leaves):
             raw = manifest.get(name.encode())
-            assert raw is not None, f"missing tensor {name}"
+            if raw is None:
+                raise TensorMissing(name)
             meta = json.loads(raw)
             tree = POSTree.from_root(self.db.store, ck.BLOB,
                                      bytes.fromhex(meta["cid"]))

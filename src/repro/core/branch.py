@@ -6,33 +6,12 @@ from __future__ import annotations
 import json
 from dataclasses import dataclass, field
 
+from ..errors import BranchExists, GuardFailed, NoSuchRef
+
 DEFAULT_BRANCH = "master"
 
-
-class GuardFailed(Exception):
-    """Guarded Put failed: current head != guard_uid (paper §4.5.1)."""
-
-
-class BranchExists(ValueError):
-    """Fork/rename target branch name is already taken for this key."""
-
-    def __init__(self, branch: str):
-        super().__init__(branch)
-        self.branch = branch
-
-    def __str__(self) -> str:
-        return f"branch exists: {self.branch}"
-
-
-class NoSuchRef(KeyError):
-    """A named branch or version uid does not resolve."""
-
-    def __init__(self, ref):
-        super().__init__(ref)
-        self.ref = ref
-
-    def __str__(self) -> str:
-        return f"no such ref: {self.ref!r}"
+__all__ = ["BranchExists", "BranchTable", "DEFAULT_BRANCH",
+           "GuardFailed", "KeyBranches", "NoSuchRef"]
 
 
 @dataclass

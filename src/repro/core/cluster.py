@@ -23,24 +23,17 @@ from . import chunk as ck
 from .chunker import ChunkParams, DEFAULT_PARAMS
 from .chunkstore import ChunkStore
 from .db import ForkBase
+from .locking import make_lock
 from .. import obs
+from ..errors import ConfigError, RoutingIndexMiss
 from ..storage import BackendBase, resolve_cids
-from ..storage.backend import ChunkMissing, group_by, put_via
+from ..storage.backend import group_by, put_via
+
+__all__ = ["Cluster", "Node", "NodeStats", "RoutingIndexMiss"]
 
 
 def _h(data: bytes) -> int:
     return int.from_bytes(hashlib.sha256(data).digest()[:8], "little")
-
-
-class RoutingIndexMiss(ChunkMissing):
-    """A read consulted the master chunk-location index and the cid has
-    no entry: the chunk was never placed, or a sweep dropped it.  Typed
-    (instead of a silent fallback to the hash owner, which holds no copy
-    and used to fail from the WRONG node) so callers can distinguish a
-    routing-layer miss from a node losing its chunk."""
-
-    def __str__(self) -> str:
-        return f"no master-index entry for chunk: {self.cid.hex()[:16]}"
 
 
 @dataclass
@@ -142,7 +135,7 @@ class _RoutingStore(BackendBase):
                     cluster.index[cid] = node
         # listeners (GC write barrier) fire with NO routing locks held:
         # the collector lock nests inside servlet locks, never inside
-        # index/store locks (see gc.incremental lock order)
+        # index/store locks (canonical order: core.locking.LOCK_ORDER)
         self._notify_put(out)
         return out
 
@@ -220,12 +213,15 @@ class Node:
     # workers and by Cluster's public verbs around any touch of this
     # node's ForkBase (branch table, live tables, pins).  RLock so a
     # verb that is already inside the servlet lock (e.g. commit_epoch
-    # folding into put) can re-enter.
-    lock: threading.RLock = field(default_factory=threading.RLock)
+    # folding into put) can re-enter.  Rank "servlet" — THE outermost
+    # lock; the canonical order lives in core.locking.LOCK_ORDER.
+    lock: threading.RLock = field(
+        default_factory=lambda: make_lock("servlet"))
     # Cross-thread access to the node's chunk store (durable segment
-    # stores mutate shared hot-tier/segment state on every op).  Leaf
-    # lock in the documented order: servlet ≺ collector ≺ {index, store}.
-    store_lock: threading.RLock = field(default_factory=threading.RLock)
+    # stores mutate shared hot-tier/segment state on every op).  Rank
+    # "store": innermost alongside "index" (see core.locking).
+    store_lock: threading.RLock = field(
+        default_factory=lambda: make_lock("store"))
 
 
 class Cluster:
@@ -237,16 +233,18 @@ class Cluster:
                  durable_root: str | None = None,
                  hot_bytes: int = 64 << 20,
                  segment_bytes: int = 4 << 20):
-        assert mode in ("1LP", "2LP")
+        if mode not in ("1LP", "2LP"):
+            raise ConfigError(f"unknown placement mode {mode!r} "
+                              "(expected '1LP' or '2LP')")
         self.mode = mode
         self.params = params
         self.durable_root = durable_root
         self.index: dict[bytes, int] = {}   # master's chunk location map
         # guards the master index and the quarantine/re-replication
-        # state below; inner-most alongside Node.store_lock in the lock
-        # order (servlet ≺ collector ≺ {index, store}) — never held
+        # state below; rank "index" — innermost alongside Node.store_lock
+        # (canonical order in core.locking.LOCK_ORDER) — never held
         # across a store op or a listener callback
-        self._index_lock = threading.RLock()
+        self._index_lock = make_lock("index")
         # audit-enforced quarantine: node ids placement must route
         # around.  Populated via quarantine_node() (called by the audit
         # daemon at audit.quarantine time — enforcement works even with

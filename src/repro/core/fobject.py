@@ -11,6 +11,7 @@ import struct
 from dataclasses import dataclass
 
 from . import chunk as ck
+from ..errors import TamperedChunk
 
 # object type tags: chunkable types reuse chunk kinds; primitives below.
 TSTRING = 7
@@ -51,7 +52,8 @@ class FObject:
 
     @classmethod
     def deserialize(cls, raw: bytes, uid: bytes) -> "FObject":
-        assert ck.chunk_type(raw) == ck.META
+        if ck.chunk_type(raw) != ck.META:
+            raise TamperedChunk(uid, "fobject meta chunk has wrong type tag")
         p = ck.chunk_payload(raw)
         t = p[0]
         i = 1

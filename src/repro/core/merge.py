@@ -12,15 +12,12 @@ from typing import Callable
 import numpy as np
 
 from . import chunk as ck
+from ..errors import MergeConflict
 from .fobject import TINT, load_fobject
 from .postree import POSTree
 from .types import (FInt, FMap, FSet)
 
-
-class MergeConflict(Exception):
-    def __init__(self, conflicts):
-        self.conflicts = conflicts
-        super().__init__(f"{len(conflicts)} merge conflict(s)")
+__all__ = ["Conflict", "MergeConflict", "merge"]
 
 
 @dataclass(frozen=True)

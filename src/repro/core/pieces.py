@@ -12,6 +12,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Any, Callable
 
+from ..errors import InvariantViolation
+
 
 @dataclass
 class _Piece:
@@ -30,7 +32,9 @@ class PieceTable:
         return sum(p.length for p in self.pieces)
 
     def splice(self, vstart: int, vend: int, new: Any, new_len: int) -> None:
-        assert 0 <= vstart <= vend <= len(self), (vstart, vend, len(self))
+        if not (0 <= vstart <= vend <= len(self)):
+            raise InvariantViolation(
+                f"splice range out of bounds: {(vstart, vend, len(self))}")
         out: list[_Piece] = []
         pos = 0
         inserted = False

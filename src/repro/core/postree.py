@@ -30,6 +30,7 @@ from . import chunk as ck
 from .chunk import Entry
 from .chunker import (ChunkParams, DEFAULT_PARAMS, boundary_bitmap,
                       cut_bytes, cut_elements, index_cuts)
+from ..errors import InvariantViolation
 from ..storage import WriteBuffer
 
 SORTED_KINDS = (ck.SET, ck.MAP)
@@ -282,7 +283,8 @@ class POSTree:
         return self.leaf_elements(j)[off]
 
     def read_bytes(self, start: int, length: int) -> bytes:
-        assert self.kind == ck.BLOB
+        if self.kind != ck.BLOB:
+            raise InvariantViolation(f"read_bytes on non-blob kind {self.kind}")
         end = min(start + length, self.total_count)
         if end <= start:
             return b""
@@ -307,7 +309,8 @@ class POSTree:
 
     def find_key(self, key: bytes):
         """Sorted kinds: (found, leaf_idx, local_idx, global_idx)."""
-        assert self.kind in SORTED_KINDS
+        if self.kind not in SORTED_KINDS:
+            raise InvariantViolation(f"find_key on unsorted kind {self.kind}")
         lk = self._leaf_keys()
         j = bisect.bisect_left(lk, key)
         if j >= len(lk):
@@ -332,7 +335,8 @@ class POSTree:
     def descend_key(self, key: bytes):
         """Pure tree-walk lookup (no materialized leaf keys) — exercises the
         on-disk SIndex path the way a remote client would (paper §3.4)."""
-        assert self.kind in SORTED_KINDS
+        if self.kind not in SORTED_KINDS:
+            raise InvariantViolation(f"descend_key on unsorted kind {self.kind}")
         node = self.levels[-1][0]
         raw = self.store.get(node.cid)
         while ck.chunk_type(raw) in (ck.UINDEX, ck.SINDEX):
@@ -355,9 +359,10 @@ class POSTree:
         (any kind) or sorted-kind ``key`` — exactly the nodes a stateless
         verifier needs to recompute the root cid.  Returns
         (index node raws root-down, leaf raw)."""
-        assert (pos is None) != (key is None)
-        if key is not None:
-            assert self.kind in SORTED_KINDS
+        if (pos is None) == (key is None):
+            raise InvariantViolation("audit_path needs exactly one of pos/key")
+        if key is not None and self.kind not in SORTED_KINDS:
+            raise InvariantViolation(f"audit_path by key on unsorted kind {self.kind}")
         raw = self._get_raw(self.root_cid)
         index_raws: list[bytes] = []
         while ck.chunk_type(raw) in (ck.UINDEX, ck.SINDEX):
@@ -417,7 +422,8 @@ class POSTree:
                      sink=None) -> None:
         """Blob: apply [(start, end, replacement)] byte splices (sorted,
         non-overlapping) and incrementally re-chunk."""
-        assert self.kind == ck.BLOB
+        if self.kind != ck.BLOB:
+            raise InvariantViolation(f"splice_bytes on non-blob kind {self.kind}")
         if not edits:
             return
         self._open_batch(sink)
@@ -497,7 +503,8 @@ class POSTree:
         earlier indices), so a 100-key update on a 5M-row map re-chunks
         ~100 leaves, not the whole range between the first and last key.
         The index levels are recomputed once at the end."""
-        assert self.kind != ck.BLOB
+        if self.kind == ck.BLOB:
+            raise InvariantViolation("splice_elements on blob tree")
         if not edits:
             return
         self._open_batch(sink)
@@ -610,7 +617,9 @@ class POSTree:
     def diff_keys(self, other: "POSTree"):
         """Sorted kinds: (added, removed, changed) keys vs `other`
         (self = new, other = old), parsing only differing leaves."""
-        assert self.kind in SORTED_KINDS and other.kind == self.kind
+        if self.kind not in SORTED_KINDS or other.kind != self.kind:
+            raise InvariantViolation(
+                f"diff_keys needs matching sorted kinds, got {self.kind}/{other.kind}")
         acids = {e.cid for e in self.levels[0]}
         bcids = {e.cid for e in other.levels[0]}
         da = [i for i, e in enumerate(self.levels[0]) if e.cid not in bcids]

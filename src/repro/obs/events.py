@@ -47,6 +47,9 @@ class EventLog:
         # ``ts`` (wall clock) is for the JSONL sink and humans; ``mono_us``
         # shares the span clock (trace.monotonic), so events and span
         # timelines correlate — snapshot() exports the same clock's "now"
+        # repro: allow(CONTRACT002): journal timestamps are wall-clock on
+        # purpose so external logs can be correlated; ordering never uses
+        # ts — it uses mono_us from the span clock
         ev = {"kind": kind, "ts": round(time.time(), 6),
               "mono_us": round(monotonic() * 1e6, 3)}
         for k, v in attrs.items():

@@ -109,12 +109,18 @@ class Auditor:
         for cid in cids:
             for si in backend._ring(cid):
                 store = backend.stores[si]
+                # repro: allow(PERF001): audit probes per copy on purpose
+                # — fault attribution needs to know WHICH replica lost the
+                # chunk, and the walk continues past failures (a batched
+                # has_many can't name the offender per ring member)
                 if not store.has(cid):
                     rep.findings.append(AuditFinding(
                         f"replica{si}", "missing",
                         "ring member lost its copy", cid))
                     continue
                 try:
+                    # repro: allow(PERF001): per-copy get so one corrupt
+                    # replica is named without masking the healthy ones
                     copies.append((si, cid, store.get(cid)))
                 except ValueError as e:   # verify-enabled leaf caught it
                     rep.findings.append(AuditFinding(
@@ -161,6 +167,8 @@ class Auditor:
         metas: list[tuple[bytes, str, bytes, bytes]] = []
         for key, tag, uid in committed:
             try:
+                # repro: allow(PERF001): per-head get so a single tampered
+                # meta chunk is attributed to its branch head, not the batch
                 metas.append((key, tag, uid, db.store.get(uid)))
             except ValueError as e:     # TamperedChunk from a verify store
                 rep.findings.append(AuditFinding(
@@ -204,8 +212,11 @@ class Auditor:
                 [base for *_, base in with_bases])) if with_bases else []
         except (KeyError, ValueError):
             base_raws = []          # degrade per-item to name offenders
-            for key, tag, uid, _, base in with_bases:
+            for key, tag, _uid, _, base in with_bases:
                 try:
+                    # repro: allow(PERF001): deliberate degrade path — the
+                    # batched get_many above already failed; re-walk per
+                    # item to name the offending base uid(s)
                     base_raws.append(db.store.get(base))
                 except (KeyError, ValueError) as e:
                     rep.findings.append(AuditFinding(
@@ -257,12 +268,17 @@ class Auditor:
         held: list[tuple[int, bytes, bytes]] = []
         for cid, ni in placed:
             store = cluster.nodes[ni].store
+            # repro: allow(PERF001): placement audit asks one node about
+            # one cid — per-node attribution is the product, not an N+1
+            # accident
             if not store.has(cid):
                 rep.findings.append(AuditFinding(
                     f"node{ni}", "missing",
                     "master index points at a chunk the node lost", cid))
                 continue
             try:
+                # repro: allow(PERF001): per-chunk get keeps the audit
+                # walking past a corrupt node instead of failing the sample
                 held.append((ni, cid, store.get(cid)))
             except ValueError as e:       # verify-enabled node caught it
                 rep.findings.append(AuditFinding(

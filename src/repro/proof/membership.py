@@ -30,6 +30,7 @@ from dataclasses import dataclass
 from ..core import chunk as ck
 from ..core.hashing import content_hash_many, current_hash
 from ..core.postree import SORTED_KINDS, child_by_key, child_by_pos
+from ..errors import InvalidProof  # noqa: F401  re-exported: historical home
 
 _U16 = struct.Struct("<H")
 _U32 = struct.Struct("<I")
@@ -41,12 +42,6 @@ MEMBER_BY_KEY = 2
 ABSENCE = 3
 
 _CHUNK_KINDS = (ck.BLOB, ck.LIST, ck.SET, ck.MAP)
-
-
-class InvalidProof(ValueError):
-    """The proof does not authenticate its claim against the trusted
-    anchor (hash chain broken, navigation inconsistent, claim absent,
-    or the bytes fail to parse)."""
 
 
 @dataclass(frozen=True)

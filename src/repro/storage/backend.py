@@ -20,33 +20,15 @@ from dataclasses import dataclass, fields
 from time import perf_counter as _perf
 from typing import Iterator, Protocol, Sequence, runtime_checkable
 
+from ..errors import ChunkMissing, TamperedChunk
 from ..obs import REGISTRY as _OBS
 from ..obs import trace as _trace
 
-
-class ChunkMissing(KeyError):
-    """A requested cid is not present in the backend (or any replica)."""
-
-    def __init__(self, cid: bytes):
-        super().__init__(cid)
-        self.cid = cid
-
-    def __str__(self) -> str:
-        return f"chunk not found: {self.cid.hex()[:16]}"
-
-
-class TamperedChunk(ValueError):
-    """Chunk bytes do not hash to their cid: on-disk or in-flight
-    corruption / tampering (the content-addressing invariant is broken)."""
-
-    def __init__(self, cid: bytes, where: str = ""):
-        super().__init__(cid)
-        self.cid = cid
-        self.where = where
-
-    def __str__(self) -> str:
-        at = f" during {self.where}" if self.where else ""
-        return f"tampered chunk{at}: {self.cid.hex()[:16]}"
+__all__ = [
+    "BackendBase", "ChunkMissing", "StorageBackend", "StoreStats",
+    "TamperedChunk", "delete_via", "group_by", "overlay_get_many",
+    "overlay_has_many", "put_via", "resolve_cids",
+]
 
 
 @dataclass
@@ -304,6 +286,9 @@ class BackendBase:
     def _obs_hist(self, verb: str):
         h = self._obs_hists.get(verb)
         if h is None:
+            # repro: allow(OBS001): only reached from dispatchers that
+            # already checked _OBS.enabled; the handle is memoized so
+            # this runs once per (backend, verb), not per operation
             h = _OBS.histogram(f"store_{verb}_us",
                                {"backend": self._obs_label()})
             self._obs_hists[verb] = h

@@ -3,6 +3,7 @@ preserved globally — at most k copies of any chunk exist — and reads
 fail over across the replica ring."""
 from __future__ import annotations
 
+from ..errors import ConfigError
 from .backend import (BackendBase, ChunkMissing, delete_via, group_by,
                       put_via, resolve_cids)
 
@@ -12,7 +13,8 @@ class ReplicatedBackend(BackendBase):
 
     def __init__(self, stores: list, k: int = 2):
         super().__init__()
-        assert stores
+        if not stores:
+            raise ConfigError("ReplicatedBackend needs at least one store")
         self.stores = list(stores)
         self.k = min(k, len(stores))
         self._known: set[bytes] = set()   # distinct cids (for __len__)
@@ -65,7 +67,13 @@ class ReplicatedBackend(BackendBase):
                 if out[i] is not None:
                     continue
                 for ri in self._ring(cid)[1:]:  # replica lost -> fail over
+                    # repro: allow(PERF001): failover path, off the batched
+                    # fast path — walk the ring and stop at the first live
+                    # copy; a batch per replica would read chunks it is
+                    # about to discard
                     if self.stores[ri].has(cid):
+                        # repro: allow(PERF001): single fetch of the one
+                        # surviving copy found by the probe above
                         out[i] = self.stores[ri].get(cid)
                         break
                 else:
@@ -77,6 +85,8 @@ class ReplicatedBackend(BackendBase):
         primary = lambda i, c: self._ring(c)[0]  # noqa: E731
         for si, (idx, cs, _) in group_by(primary, cids).items():
             for i, cid, p in zip(idx, cs, self.stores[si].has_many(cs)):
+                # repro: allow(PERF001): ring-walk short-circuits at the
+                # first replica that holds the cid; misses are rare
                 out[i] = p or any(self.stores[ri].has(cid)
                                   for ri in self._ring(cid)[1:])
         return out

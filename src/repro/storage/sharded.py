@@ -4,6 +4,7 @@ cryptographic hashes, chunks spread uniformly across shards even under
 severely skewed key workloads (Fig. 15)."""
 from __future__ import annotations
 
+from ..errors import ConfigError
 from .backend import (BackendBase, delete_via, group_by, put_via,
                       resolve_cids)
 from .memory import MemoryBackend
@@ -16,7 +17,8 @@ class ShardedBackend(BackendBase):
         super().__init__()
         if isinstance(shards, int):
             shards = [factory() for _ in range(shards)]
-        assert shards
+        if not shards:
+            raise ConfigError("ShardedBackend needs at least one shard")
         self.shards = list(shards)
 
     def _owner(self, cid: bytes) -> int:

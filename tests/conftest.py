@@ -14,3 +14,19 @@ def rng():
 def small_params():
     from repro.core.chunker import ChunkParams
     return ChunkParams(q=8)   # 256 B chunks: many leaves at test sizes
+
+
+@pytest.fixture(autouse=True)
+def _lock_witness_guard():
+    """Under REPRO_LOCK_WITNESS=1 every test doubles as a lock-order
+    check: the global witness is reset before and asserted clean after.
+    (Tests that construct deliberate inversions use a private
+    LockWitness, so they stay green here.)  No-op when the witness is
+    off — the common local case."""
+    from repro.core import locking
+    if not locking.witness_enabled():
+        yield
+        return
+    locking.WITNESS.reset()
+    yield
+    locking.WITNESS.assert_clean()

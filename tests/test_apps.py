@@ -46,7 +46,7 @@ def test_wiki_vs_redis(rng):
     w.create("p", text)
     r.create("p", text)
     cur = text
-    for i in range(10):
+    for _ in range(10):
         pos = int(rng.integers(0, len(cur) - 100))
         ins = rng.bytes(64)
         cur = cur[:pos] + ins + cur[pos:]

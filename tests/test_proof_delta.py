@@ -43,7 +43,7 @@ def test_delta_root_matches_full_rebuild_under_churn(db, rng):
     delta-maintained root must equal a from-scratch attest_heads."""
     da = DeltaAttestor(db.branches)
     keys = [b"k%02d" % i for i in range(6)]
-    for step in range(150):
+    for _step in range(150):
         op = int(rng.integers(0, 100))
         k = keys[int(rng.integers(0, len(keys)))]
         tags = sorted(db.branches.tagged(k))

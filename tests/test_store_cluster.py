@@ -71,6 +71,8 @@ def test_meta_chunks_stay_local(rng):
     from repro.core import chunk as ck
     meta_nodes = set()
     for cid, node in cl.index.items():
+        # repro: allow(PERF001): each cid lives on a different node —
+        # there is no single store to batch against
         raw = cl.nodes[node].store.get(cid)
         if ck.chunk_type(raw) == ck.META:
             meta_nodes.add(node)

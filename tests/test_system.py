@@ -55,7 +55,7 @@ def test_end_to_end_training_with_storage(rng):
                         ckpt_every=2, db=db)
     assert ctl.step == 6 and ctl.restarts == 1
     # blockchain records the training lineage (model provenance on-chain)
-    for s, meta in ctl.ckpt.history("run"):
+    for s, _meta in ctl.ckpt.history("run"):
         ledger.write("provenance", "ckpt", s.hex().encode())
     ledger.commit()
     hist = ledger.state_scan("provenance", "ckpt")
@@ -66,7 +66,7 @@ def test_end_to_end_training_with_storage(rng):
 def test_smoke_all_archs_shapes_defined():
     from repro.configs import SHAPES, input_specs, shapes_for
     total = 0
-    for name, cfg in ARCHS.items():
+    for _name, cfg in ARCHS.items():
         for sh in shapes_for(cfg):
             specs = input_specs(cfg, SHAPES[sh])
             assert all(hasattr(s, "shape") for s in specs.values())
